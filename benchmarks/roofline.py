@@ -1,0 +1,64 @@
+"""Roofline aggregator: experiments/dryrun/*.json -> the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--pod2] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_cells(pod: str = "pod1"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, f"*__{pod}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c) -> str:
+    if "skipped" in c:
+        return (f"| {c['arch']} | {c['shape']} | — | — | — | — | skipped "
+                f"(full attention @524k; DESIGN.md §Arch-applicability) | — |")
+    if "error" in c:
+        return f"| {c['arch']} | {c['shape']} | — | — | — | — | ERROR | — |"
+    corrected = "roofline_seconds_corrected" in c
+    rs = c.get("roofline_seconds_corrected", c["roofline_seconds"])
+    ratio = c.get("useful_flops_ratio_corrected", c.get("useful_flops_ratio"))
+    ratio_s = f"{ratio:.2f}" if ratio else "—"
+    tag = "" if corrected else " *(rolled)*"
+    return (
+        f"| {c['arch']} | {c['shape']} "
+        f"| {rs['compute']:.3g} | {rs['memory']:.3g} | {rs['collective']:.3g} "
+        f"| **{rs['dominant']}**{tag} | {ratio_s} "
+        f"| {c['compile_seconds']:.0f}s |"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod2", action="store_true")
+    args = ap.parse_args()
+    pod = "pod2" if args.pod2 else "pod1"
+    cells = load_cells(pod)
+    print(f"### Roofline table ({pod}: "
+          f"{'2x16x16 = 512 chips' if args.pod2 else '16x16 = 256 chips'})\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) "
+          "| dominant | 6ND/HLO | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        print(fmt_row(c))
+    n_ok = sum(1 for c in cells if "error" not in c and "skipped" not in c)
+    n_skip = sum(1 for c in cells if "skipped" in c)
+    n_err = sum(1 for c in cells if "error" in c)
+    print(f"\n{n_ok} compiled, {n_skip} skipped-by-design, {n_err} errors "
+          f"of {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Core GGR library — the paper's contribution as composable JAX modules."""
+from .baselines import (
+    cgr_qr,
+    givens_qr,
+    householder_qr2,
+    householder_qrf,
+    mgs_qr,
+    mht_qr,
+)
+from .blocked import ggr_geqrt, ggr_qr_blocked, ggr_tsqrt
+from .counts import alpha_ratio, cgr_mults, count_mults, gr_mults
+from .distributed import (
+    cyclic_perm,
+    distributed_ggr_qr_1d,
+    distributed_orthogonalize,
+    tsqr,
+)
+from .ggr import (
+    GGRFactors,
+    apply_ggr_factors,
+    ggr_column_step,
+    ggr_column_step_at,
+    ggr_factor_column,
+    ggr_qr2,
+    suffix_norms,
+)
+
+__all__ = [
+    "GGRFactors",
+    "alpha_ratio",
+    "apply_ggr_factors",
+    "cgr_mults",
+    "cgr_qr",
+    "count_mults",
+    "cyclic_perm",
+    "distributed_ggr_qr_1d",
+    "distributed_orthogonalize",
+    "ggr_column_step",
+    "ggr_column_step_at",
+    "ggr_factor_column",
+    "ggr_geqrt",
+    "ggr_qr2",
+    "ggr_qr_blocked",
+    "ggr_tsqrt",
+    "givens_qr",
+    "gr_mults",
+    "householder_qr2",
+    "householder_qrf",
+    "mgs_qr",
+    "mht_qr",
+    "suffix_norms",
+    "tsqr",
+]

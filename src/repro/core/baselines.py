@@ -1,0 +1,247 @@
+"""Baseline QR routines the paper compares against.
+
+* ``givens_qr``       — classical Givens Rotation (one 2x2 rotation per element,
+                        n(n-1)/2 sequences; eq. 4 multiplication count).
+* ``cgr_qr``          — Column-wise GR [13]: one *serial scan* per column (n-1
+                        sequences), the pre-GGR formulation.
+* ``householder_qr2`` — LAPACK ``dgeqr2`` (dgemv-style rank-1 updates).
+* ``householder_qrf`` — LAPACK ``dgeqrf`` (blocked compact-WY, dgemm updates).
+* ``mht_qr``          — ``dgeqr2ht`` [7]: Modified HT, panel-fused PA = A - V·(T·(VᵀA))
+                        without materializing P.
+* ``mgs_qr``          — Modified Gram-Schmidt.
+
+All are pure-JAX, jit-able with static shapes, and serve as correctness oracles
+and benchmark baselines (fig. 9 / fig. 13 analogues).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "givens_qr",
+    "cgr_qr",
+    "householder_qr2",
+    "householder_qrf",
+    "mht_qr",
+    "mgs_qr",
+]
+
+
+# ---------------------------------------------------------------------------
+# classical Givens
+# ---------------------------------------------------------------------------
+def _rot_pair(hi: jax.Array, lo: jax.Array, c_idx):
+    """Rotate the 2-row pair (hi, lo) to zero lo[c_idx]."""
+    a = hi[c_idx]
+    b = lo[c_idx]
+    r = jnp.sqrt(a * a + b * b)
+    safe = r > 0
+    c = jnp.where(safe, a / jnp.where(safe, r, 1.0), 1.0)
+    s = jnp.where(safe, b / jnp.where(safe, r, 1.0), 0.0)
+    new_hi = c * hi + s * lo
+    new_lo = -s * hi + c * lo
+    return new_hi, new_lo
+
+
+@jax.jit
+def givens_qr(A: jax.Array) -> jax.Array:
+    """Classical GR: bottom-up rotations, one per annihilated element."""
+    m, n = A.shape
+    steps = min(m - 1, n)
+
+    def col_body(c, X):
+        def row_body(idx, X):
+            i = m - 1 - idx  # rotate rows (i-1, i); only active when i > c
+
+            def do(X):
+                hi, lo = X[i - 1], X[i]
+                nh, nl = _rot_pair(hi, lo, c)
+                return X.at[i - 1].set(nh).at[i].set(nl)
+
+            return jax.lax.cond(i > c, do, lambda X: X, X)
+
+        return jax.lax.fori_loop(0, m - 1, row_body, X)
+
+    R = jax.lax.fori_loop(0, steps, col_body, A)
+    return jnp.triu(R)
+
+
+# ---------------------------------------------------------------------------
+# CGR — column-wise Givens Rotation [13] as a serial scan per column
+# ---------------------------------------------------------------------------
+@jax.jit
+def cgr_qr(A: jax.Array) -> jax.Array:
+    """CGR: per column, a bottom-up serial scan of 2x2 rotations.
+
+    Mathematically matches the GGR closed forms; structurally serial (the
+    scan carry is the partially-accumulated row) — this is the formulation
+    GGR improves upon by precomputing suffix norms/dots.
+    """
+    m, n = A.shape
+    steps = min(m - 1, n)
+
+    def col_body(c, X):
+        rows = jnp.arange(m)
+        active = rows >= c  # rows participating in this column's scan
+
+        def scan_body(carry, inp):
+            row, is_active = inp
+            # rotate (row, carry) to zero carry's pivot column entry into row
+            a = row[c]
+            b = carry[c]
+            r = jnp.sqrt(a * a + b * b)
+            safe = r > 0
+            cc = jnp.where(safe, a / jnp.where(safe, r, 1.0), 1.0)
+            ss = jnp.where(safe, b / jnp.where(safe, r, 1.0), 0.0)
+            new_carry = cc * row + ss * carry  # accumulated row (moves up)
+            out_row = -ss * row + cc * carry   # finalized row i+1
+            new_carry = jnp.where(is_active, new_carry, carry)
+            return new_carry, out_row
+
+        # scan bottom-up: start carry = zeros (t_{m+1} = 0 ⇒ first rotation is identity-ish)
+        init = jnp.zeros_like(X[0])
+        carry, outs = jax.lax.scan(scan_body, init, (X[::-1], active[::-1]))
+        body_rows = outs[::-1]
+        # out produced at row i is the finalized row i+1 → shift DOWN by one
+        shifted = jnp.concatenate([jnp.zeros_like(body_rows[:1]), body_rows[:-1]], axis=0)
+        X = jnp.where((rows > c)[:, None], shifted, X)
+        X = X.at[c].set(jnp.where(c < m, carry, X[c]))
+        return X
+
+    def col_loop(c, X):
+        return col_body(c, X)
+
+    R = jax.lax.fori_loop(0, steps, col_loop, A)
+    return jnp.triu(R)
+
+
+# ---------------------------------------------------------------------------
+# Householder
+# ---------------------------------------------------------------------------
+def _house_vec(x: jax.Array, c):
+    """Masked Householder vector for column x with pivot c; returns (v, beta)."""
+    m = x.shape[0]
+    rows = jnp.arange(m)
+    xa = jnp.where(rows >= c, x, 0.0)
+    sigma = jnp.sum(xa * xa)
+    norm = jnp.sqrt(sigma)
+    alpha = xa[c]
+    sign = jnp.where(alpha >= 0, 1.0, -1.0)
+    v0 = alpha + sign * norm
+    v = jnp.where(rows == c, v0, xa)
+    vtv = jnp.sum(v * v)
+    safe = vtv > 0
+    beta = jnp.where(safe, 2.0 / jnp.where(safe, vtv, 1.0), 0.0)
+    return v, beta
+
+
+@functools.partial(jax.jit, static_argnames=("want_factors",))
+def householder_qr2(A: jax.Array, want_factors: bool = False):
+    """dgeqr2: unblocked Householder QR (rank-1 dgemv-style updates)."""
+    m, n = A.shape
+    steps = min(m, n)
+
+    def body(c, carry):
+        X, V, betas = carry
+        v, beta = _house_vec(X[:, c], c)
+        w = beta * (v @ X)          # dgemv
+        X = X - v[:, None] * w[None, :]  # rank-1 update
+        V = V.at[:, c].set(v)
+        betas = betas.at[c].set(beta)
+        return X, V, betas
+
+    V0 = jnp.zeros((m, steps), A.dtype)
+    b0 = jnp.zeros((steps,), A.dtype)
+    R, V, betas = jax.lax.fori_loop(0, steps, body, (A, V0, b0))
+    if want_factors:
+        return jnp.triu(R), V, betas
+    return jnp.triu(R)
+
+
+def _form_T(V: jax.Array, betas: jax.Array) -> jax.Array:
+    """Compact-WY T: Q = I - V T Vᵀ (forward accumulation)."""
+    b = V.shape[1]
+
+    def body(j, T):
+        col = -betas[j] * (T @ (V.T @ V[:, j]))
+        col = jnp.where(jnp.arange(b) < j, col, 0.0)
+        T = T.at[:, j].set(col)
+        T = T.at[j, j].set(betas[j])
+        return T
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros((b, b), V.dtype))
+
+
+def householder_qrf(A: jax.Array, block: int = 32):
+    """dgeqrf: blocked Householder QR with compact-WY dgemm trailing updates."""
+    m, n = A.shape
+    steps = min(m, n)
+    R = A
+    for k0 in range(0, steps, block):
+        b = min(block, steps - k0)
+        rows = m - k0  # panel starts at the block diagonal
+        panel = jax.lax.dynamic_slice(R, (k0, k0), (rows, b))
+        pr, V, betas = householder_qr2(panel, want_factors=True)
+        R = jax.lax.dynamic_update_slice(R, pr, (k0, k0))
+        rest = n - (k0 + b)
+        if rest > 0:
+            T = _form_T(V, betas)
+            C = jax.lax.dynamic_slice(R, (k0, k0 + b), (rows, rest))
+            C = C - V @ (T.T @ (V.T @ C))  # dgemm chain
+            R = jax.lax.dynamic_update_slice(R, C, (k0, k0 + b))
+    return jnp.triu(R)
+
+
+def mht_qr(A: jax.Array, block: int = 32):
+    """dgeqr2ht [7]: Modified HT — panel-local factor, single fused PA update.
+
+    Identical math to dgeqrf but the trailing update is expressed as one fused
+    expression PA = A - V·(T·(VᵀA)) evaluated jointly with the panel step (the
+    paper's loop-fusion: no separate P, fewer passes over the trailing matrix).
+    """
+    m, n = A.shape
+    steps = min(m, n)
+    R = A
+    for k0 in range(0, steps, block):
+        b = min(block, steps - k0)
+        width = n - k0
+        rows = m - k0
+        panelplus = jax.lax.dynamic_slice(R, (k0, k0), (rows, width))
+        pr, V, betas = householder_qr2(panelplus[:, :b], want_factors=True)
+        T = _form_T(V, betas)
+        # fused: update panel remainder and trailing matrix in one expression
+        W = T.T @ (V.T @ panelplus)
+        panelplus = panelplus - V @ W
+        panelplus = jax.lax.dynamic_update_slice(panelplus, pr, (0, 0))
+        R = jax.lax.dynamic_update_slice(R, panelplus, (k0, k0))
+    return jnp.triu(R)
+
+
+# ---------------------------------------------------------------------------
+# MGS
+# ---------------------------------------------------------------------------
+@jax.jit
+def mgs_qr(A: jax.Array):
+    """Modified Gram-Schmidt; returns (Q_thin, R)."""
+    m, n = A.shape
+
+    def body(c, carry):
+        Q, R = carry
+        a = Q[:, c]
+        r = jnp.sqrt(jnp.sum(a * a))
+        safe = r > 0
+        q = jnp.where(safe, a / jnp.where(safe, r, 1.0), a)
+        R = R.at[c, c].set(r)
+        proj = q @ Q  # (n,)
+        cols = jnp.arange(n)
+        mask = cols > c
+        R = R.at[c, :].set(jnp.where(mask, proj, R[c, :]))
+        Q = Q - jnp.where(mask, proj, 0.0)[None, :] * q[:, None]
+        Q = Q.at[:, c].set(q)
+        return Q, R
+
+    Q, R = jax.lax.fori_loop(0, n, body, (A, jnp.zeros((n, n), A.dtype)))
+    return Q, jnp.triu(R)

@@ -1,0 +1,206 @@
+"""Generalized Givens Rotation (GGR) — the paper's core contribution.
+
+Closed forms (derived from eq. 2 of the paper, 0-based indexing), annihilating
+column ``c`` of ``X`` below the diagonal in ONE fused sweep:
+
+    t_i     = sqrt( sum_{r>=i} x_{r,c}^2 )            (suffix norms; reverse cumsum)
+    s_{i,j} = sum_{r>i} x_{r,c} * x_{r,j}             (suffix dots;  reverse cumsum)
+    row c:    x'_{c,j}   = (x_{c,c} x_{c,j} + s_{c,j}) / t_c
+    row i+1:  x'_{i+1,j} = k_i * s_{i,j} - l_i * x_{i,j}          (the DET2 grid)
+              k_i = x_{i,c} / (t_i t_{i+1}),  l_i = t_{i+1} / t_i
+
+Everything is expressed as reverse cumulative sums + elementwise FMA, i.e. the
+paper's DOTk / DET2 macro-operations.  The compact factor of one column step is
+``(v, t)`` — the annihilated column and its suffix norms — from which ``k, l``
+are re-derived when the transform is replayed (``apply_ggr_factors``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GGRFactors",
+    "ggr_column_step",
+    "ggr_column_step_at",
+    "ggr_qr2",
+    "ggr_factor_column",
+    "apply_ggr_factors",
+    "suffix_norms",
+]
+
+_EPS = {jnp.float64.dtype: 1e-300, jnp.float32.dtype: 1e-30, jnp.bfloat16.dtype: 1e-30}
+
+
+def _eps_for(dtype) -> float:
+    return _EPS.get(jnp.dtype(dtype), 1e-30)
+
+
+def suffix_norms(col: jax.Array) -> jax.Array:
+    """t_i = sqrt(sum_{r>=i} col_r^2) via reverse cumsum (f32+ accumulation)."""
+    acc = col.astype(jnp.promote_types(col.dtype, jnp.float32))
+    t2 = jnp.cumsum((acc * acc)[::-1])[::-1]
+    return jnp.sqrt(t2)
+
+
+def scaled_column(v: jax.Array):
+    """(v_scaled, t_scaled, sigma): overflow/underflow-safe column stats.
+
+    All GGR update formulas are invariant under column scaling (k·S and l·x
+    terms cancel sigma; the pivot row is P/t), so computing with v/sigma and
+    its suffix norms is exact — this is the safe-Givens scaling of the
+    paper's ref [26] applied to the fused form.  Only the annihilated-column
+    diagonal needs sigma back: R[pivot, c] = sigma * t_scaled[pivot].
+    """
+    f32 = jnp.promote_types(v.dtype, jnp.float32)
+    va = v.astype(f32)
+    sigma = jnp.max(jnp.abs(va))
+    safe = sigma > 0
+    vs = va / jnp.where(safe, sigma, 1.0)
+    ts = suffix_norms(vs)
+    return vs.astype(v.dtype), ts.astype(v.dtype), sigma.astype(v.dtype)
+
+
+class GGRFactors(NamedTuple):
+    """Compact representation of one GGR column step (cf. Householder (v, tau)).
+
+    v: the annihilated (masked) column, shape (m,)
+    t: its suffix norms,               shape (m,)
+    """
+
+    v: jax.Array
+    t: jax.Array
+
+
+def _ggr_coeffs(v: jax.Array, t: jax.Array):
+    """k, l vectors + validity mask from a (masked) column and its suffix norms."""
+    eps = _eps_for(t.dtype)
+    t_next = jnp.concatenate([t[1:], jnp.zeros((1,), t.dtype)])
+    valid = t_next > eps  # rotation at (i, i+1) is non-degenerate
+    safe_t = jnp.where(t > eps, t, 1.0)
+    safe_tn = jnp.where(valid, t_next, 1.0)
+    k = v / (safe_t * safe_tn)
+    l = safe_tn / safe_t
+    return k, l, valid
+
+
+def _ggr_update(X: jax.Array, v: jax.Array, t: jax.Array, pivot: jax.Array | int):
+    """Apply one GGR column transform to all columns of X (static shapes).
+
+    ``v`` must be the active column masked to zero above ``pivot``; rows above
+    ``pivot`` are left untouched.
+    """
+    m = X.shape[0]
+    f32 = jnp.promote_types(X.dtype, jnp.float32)
+    Xa = X.astype(f32)
+    va = v.astype(f32)
+    ta = t.astype(f32)
+    eps = _eps_for(f32)
+
+    prod = va[:, None] * Xa  # (m, n) — DOT partials
+    P = jnp.cumsum(prod[::-1], axis=0)[::-1]  # P_i = prod_i + S_i = sum_{r>=i}
+    # exclusive suffix sum via SHIFT of the inclusive one — computing it as
+    # P - prod cancels catastrophically when |prod_i| >> |tail|
+    S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
+
+    k, l, valid = _ggr_coeffs(va, ta)
+
+    # Pivot-row update extracted once (O(n)), not evaluated grid-wide: the
+    # row-1 DOT of eq. 2 is (v·x_pivot + s_pivot)/t_pivot = P[pivot]/t_pivot.
+    t_piv = jax.lax.dynamic_slice(ta, (pivot,), (1,))[0]
+    P_piv = jax.lax.dynamic_slice(P, (pivot, 0), (1, Xa.shape[1]))
+    pivot_row = P_piv / jnp.where(t_piv > eps, t_piv, 1.0)
+
+    # Candidate shifted DET2 update: new row i+1 from old row i.
+    det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * Xa[:-1, :]
+    det2 = jnp.where(valid[:-1, None], det2, Xa[1:, :])
+    cand_below = jnp.concatenate([Xa[:1, :], det2], axis=0)  # aligned to rows 1..m-1
+
+    rows = jnp.arange(m)[:, None]
+    # pivot-row guard: if the whole active column is ~0, no transform at all.
+    do_any = t_piv > eps
+    out = jnp.where(rows < pivot, Xa, jnp.where(rows == pivot, pivot_row, cand_below))
+    out = jnp.where(do_any, out, Xa)
+    return out.astype(X.dtype)
+
+
+def ggr_column_step(X: jax.Array) -> jax.Array:
+    """One GGR iteration: annihilate column 0 below the diagonal (eq. 2)."""
+    vs, ts, sigma = scaled_column(X[:, 0])
+    out = _ggr_update(X, vs, ts, 0)
+    # exact zeros below the diagonal of the annihilated column
+    m = X.shape[0]
+    col0 = jnp.where(jnp.arange(m) == 0, (sigma * ts[0]).astype(out.dtype), 0.0)
+    return out.at[:, 0].set(jnp.where(ts[0] > _eps_for(ts.dtype), col0, out[:, 0]))
+
+
+def ggr_column_step_at(X: jax.Array, c: jax.Array | int, pivot=None) -> jax.Array:
+    """Annihilate column ``c`` below row ``pivot`` (default: the diagonal, c).
+
+    ``pivot != c`` arises in panel factorization, where local column c of a
+    panel sits at global pivot row ``panel_offset + c``.
+    """
+    if pivot is None:
+        pivot = c
+    m = X.shape[0]
+    rows = jnp.arange(m)
+    v = jnp.where(rows >= pivot, X[:, c], 0.0).astype(X.dtype)
+    vs, ts, sigma = scaled_column(v)
+    out = _ggr_update(X, vs, ts, pivot)
+    eps = _eps_for(ts.dtype)
+    t_piv = ts[pivot]
+    newcol = jnp.where(rows == pivot, (sigma * t_piv).astype(out.dtype),
+                       jnp.where(rows < pivot, out[:, c], 0.0))
+    newcol = jnp.where(t_piv > eps, newcol, out[:, c])
+    return out.at[:, c].set(newcol)
+
+
+def ggr_factor_column(X: jax.Array, c: jax.Array | int, pivot=None) -> GGRFactors:
+    """Compact factors for the step annihilating column c below ``pivot``.
+
+    Factors are stored in scaled form (v/sigma, t/sigma) — the replayed
+    update formulas are scale-invariant, so apply needs no sigma.
+    """
+    if pivot is None:
+        pivot = c
+    rows = jnp.arange(X.shape[0])
+    v = jnp.where(rows >= pivot, X[:, c], 0.0).astype(X.dtype)
+    vs, ts, _ = scaled_column(v)
+    return GGRFactors(v=vs, t=ts)
+
+
+def apply_ggr_factors(factors: GGRFactors, X: jax.Array, pivot: jax.Array | int) -> jax.Array:
+    """Replay a stored column transform on new columns X (the trailing update)."""
+    return _ggr_update(X, factors.v, factors.t, pivot)
+
+
+@functools.partial(jax.jit, static_argnames=("want_q",))
+def ggr_qr2(A: jax.Array, want_q: bool = False):
+    """Unblocked GGR QR — ``dgeqr2ggr``.  Returns R (and Q if requested).
+
+    Column loop with the fused one-sweep GGR step; the analogue of the paper's
+    LAPACK ``lapack_dgeqr2ggr`` wrapper calling ``update()`` n times.
+    """
+    m, n = A.shape
+    steps = min(m - 1, n) if m > 1 else 0
+
+    if not want_q:
+        def body(c, R):
+            return ggr_column_step_at(R, c)
+
+        R = jax.lax.fori_loop(0, steps, body, A)
+        return jnp.triu(R)  # (m, n); exact zeros below the diagonal
+
+    def body_q(c, carry):
+        R, Qt = carry
+        f = ggr_factor_column(R, c)
+        R = ggr_column_step_at(R, c)
+        Qt = apply_ggr_factors(f, Qt, c)
+        return R, Qt
+
+    qt0 = jnp.eye(m, dtype=A.dtype) + 0.0 * A[:, :1]  # shard_map vma-safe init
+    R, Qt = jax.lax.fori_loop(0, steps, body_q, (A, qt0))
+    return jnp.triu(R), Qt.T

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticTokens
+
+__all__ = ["SyntheticTokens"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for GGR hot spots (validated in interpret mode on CPU).
+
+kernels:
+  ggr_panel  — fused GEQRT panel factorization (VMEM-resident, merged
+               UPDATE_ROW1/UPDATE schedule — the paper's RDP co-design)
+  ggr_apply  — fused DET2-grid trailing update with b-fold VMEM reuse
+  ops        — jit'd public wrappers incl. the full-QR Pallas driver
+  ref        — pure-jnp oracles
+"""
+from .ops import apply_panel, default_interpret, ggr_qr_pallas, panel_qr, tsqrt
+
+__all__ = ["apply_panel", "default_interpret", "ggr_qr_pallas", "panel_qr", "tsqrt"]

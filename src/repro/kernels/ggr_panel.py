@@ -1,0 +1,139 @@
+"""Pallas GEQRT kernel: fused GGR panel factorization, VMEM-resident.
+
+TPU co-design notes (the paper's RDP mapping, §4.2 / fig. 12):
+
+* the whole (m, b) panel lives in VMEM for the entire factorization — the
+  analogue of keeping the working set in the PE's Local Memory;
+* per column: suffix norms (DOT-chain) + suffix dots + DET2 grid are all
+  computed in ONE pass, i.e. the paper's merged UPDATE_ROW1/UPDATE schedule —
+  no HBM round-trip between the 2-norm, k/l-vector and trailing updates;
+* column extraction / write-back use one-hot contractions (MXU-friendly,
+  avoids dynamic lane slicing which Mosaic restricts);
+* the reverse cumulative sums use log2(m) shift-add doubling steps — only
+  static slices, pads and adds, all trivially Mosaic-lowerable.
+
+The kernel emits (R, V, T): the factored panel plus the compact GGR factors
+consumed by ``ggr_apply`` for trailing updates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["panel_factor_pallas"]
+
+_EPS = 1e-30
+
+
+def _revcumsum(x: jax.Array) -> jax.Array:
+    """Reverse cumsum along axis 0 via doubling (log2 m shift-adds)."""
+    m = x.shape[0]
+    d = 1
+    while d < m:
+        # x[i] += x[i + d]  (zero beyond the end)
+        shifted = jnp.concatenate(
+            [x[d:], jnp.zeros((d,) + x.shape[1:], x.dtype)], axis=0
+        )
+        x = x + shifted
+        d *= 2
+    return x
+
+
+def _ggr_column_update(X, col_onehot, pivot_row, rows):
+    """One fused GGR column step on X (m, n); returns updated X and (v, t).
+
+    The column is scaled by its max-abs before the norm/coefficient math
+    (safe-Givens, ref [26] of the paper); all update formulas are
+    scale-invariant so no rescaling of the trailing matrix is needed.
+    Returned (v, t) are the SCALED factors; sigma restores the diagonal.
+    """
+    m = X.shape[0]
+    col = (X * col_onehot[None, :]).sum(axis=1)  # one-hot extract (MXU/VPU)
+    v = jnp.where(rows >= pivot_row, col, 0.0)
+    sigma = jnp.max(jnp.abs(v))
+    v = v / jnp.where(sigma > 0, sigma, 1.0)
+    t2 = _revcumsum((v * v)[:, None])[:, 0]
+    t = jnp.sqrt(t2)
+
+    prod = v[:, None] * X
+    P = _revcumsum(prod)  # P_i = sum_{r>=i} (inclusive)
+    # exclusive suffix via shift (P - prod would cancel catastrophically)
+    S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
+
+    t_next = jnp.concatenate([t[1:], jnp.zeros((1,), t.dtype)])
+    valid = t_next > _EPS
+    safe_t = jnp.where(t > _EPS, t, 1.0)
+    safe_tn = jnp.where(valid, t_next, 1.0)
+    k = v / (safe_t * safe_tn)
+    l = safe_tn / safe_t
+
+    # pivot row extracted via one-hot contraction (no dynamic lane slicing):
+    piv_onehot = (rows == pivot_row).astype(X.dtype)
+    t_piv = (t * piv_onehot).sum()
+    pivot_vals = piv_onehot @ P  # (n,) row-1 DOT of eq. 2
+    pivot_new = pivot_vals / jnp.where(t_piv > _EPS, t_piv, 1.0)
+
+    det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * X[:-1, :]
+    det2 = jnp.where(valid[:-1, None], det2, X[1:, :])
+    cand_below = jnp.concatenate([X[:1, :], det2], axis=0)
+
+    rr = rows[:, None]
+    do_any = t_piv > _EPS
+    out = jnp.where(
+        rr < pivot_row, X, jnp.where(rr == pivot_row, pivot_new[None, :], cand_below)
+    )
+    out = jnp.where(do_any, out, X)
+    return out, v, t, do_any, sigma
+
+
+def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int):
+    X = a_ref[...]
+    m, b = X.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
+
+    def body(c, carry):
+        X, V, T = carry
+        onehot = (cols == c).astype(X.dtype)
+        Xn, v, t, do_any, sigma = _ggr_column_update(X, onehot, pivot0 + c, rows)
+        # write the annihilated column exactly: sigma·t[pivot] at pivot, 0 below
+        tp = sigma * (t * (rows == pivot0 + c)).sum()
+        newcol = jnp.where(rows == pivot0 + c, tp, jnp.where(rows < pivot0 + c, Xn @ onehot, 0.0))
+        newcol = jnp.where(do_any, newcol, Xn @ onehot)
+        Xn = Xn * (1.0 - onehot)[None, :] + newcol[:, None] * onehot[None, :]
+        V = V * (1.0 - onehot)[None, :] + v[:, None] * onehot[None, :]
+        T = T * (1.0 - onehot)[None, :] + t[:, None] * onehot[None, :]
+        return Xn, V, T
+
+    V0 = jnp.zeros((m, b), X.dtype)
+    T0 = jnp.zeros((m, b), X.dtype)
+    R, V, T = jax.lax.fori_loop(0, b, body, (X, V0, T0))
+    r_ref[...] = R
+    v_ref[...] = V
+    t_ref[...] = T
+
+
+@functools.partial(jax.jit, static_argnames=("pivot0", "interpret"))
+def panel_factor_pallas(panel: jax.Array, pivot0: int = 0, interpret: bool = True):
+    """Factor an (m, b) panel in one fused VMEM-resident Pallas kernel."""
+    m, b = panel.shape
+    kern = functools.partial(_panel_kernel, pivot0=pivot0)
+    out_shapes = (
+        jax.ShapeDtypeStruct((m, b), panel.dtype),
+        jax.ShapeDtypeStruct((m, b), panel.dtype),
+        jax.ShapeDtypeStruct((m, b), panel.dtype),
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shapes,
+        in_specs=[pl.BlockSpec((m, b), lambda: (0, 0))],
+        out_specs=(
+            pl.BlockSpec((m, b), lambda: (0, 0)),
+            pl.BlockSpec((m, b), lambda: (0, 0)),
+            pl.BlockSpec((m, b), lambda: (0, 0)),
+        ),
+        interpret=interpret,
+    )(panel)

@@ -1,0 +1,83 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (kernel bodies execute as plain JAX on
+CPU — the validation mode); on TPU backends it flips to False so the Mosaic
+path compiles.  Override via REPRO_PALLAS_INTERPRET=0/1.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .ggr_apply import apply_factors_pallas
+from .ggr_panel import panel_factor_pallas
+
+__all__ = [
+    "default_interpret",
+    "panel_qr",
+    "apply_panel",
+    "tsqrt",
+    "ggr_qr_pallas",
+]
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def panel_qr(panel: jax.Array, pivot0: int = 0, interpret: bool | None = None):
+    """(R, V, T) = fused GGR factorization of an (m, b) panel."""
+    itp = default_interpret() if interpret is None else interpret
+    return panel_factor_pallas(panel, pivot0=pivot0, interpret=itp)
+
+
+def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256, interpret: bool | None = None):
+    """Replay a factored panel's b transforms over trailing columns C."""
+    itp = default_interpret() if interpret is None else interpret
+    return apply_factors_pallas(V, T, C, pivot0=pivot0, block_w=block_w, interpret=itp)
+
+
+def tsqrt(R_top: jax.Array, B: jax.Array, interpret: bool | None = None):
+    """Stacked [R_top; B] factorization (the TSQRT tile op) via the panel kernel.
+
+    Returns (R_new, V, T) where the stacked transform annihilates B entirely.
+    """
+    b = R_top.shape[1]
+    stacked = jnp.concatenate([R_top, B], axis=0)
+    R, V, T = panel_qr(stacked, pivot0=0, interpret=interpret)
+    return R[:b, :], V, T
+
+
+@functools.partial(jax.jit, static_argnames=("panel", "block_w", "interpret"))
+def ggr_qr_pallas(
+    A: jax.Array, panel: int = 32, block_w: int = 256, interpret: bool | None = None
+):
+    """Full GGR QR with Pallas tile kernels: dgeqr2ggr, TPU-native schedule.
+
+    Right-looking panel loop: factor panel p (fused kernel), then one fused
+    DET2-grid pass updates the whole trailing block while it is VMEM-resident.
+    """
+    m, n = A.shape
+    assert n % panel == 0, "pad columns to a panel multiple"
+    itp = default_interpret() if interpret is None else interpret
+    R = A
+    for p in range(n // panel):
+        c0 = p * panel
+        pan = jax.lax.dynamic_slice(R, (0, c0), (m, panel))
+        Rp, V, T = panel_factor_pallas(pan, pivot0=c0, interpret=itp)
+        R = jax.lax.dynamic_update_slice(R, Rp, (0, c0))
+        rest = n - (c0 + panel)
+        if rest > 0:
+            C = jax.lax.dynamic_slice(R, (0, c0 + panel), (m, rest))
+            bw = min(block_w, rest)
+            while rest % bw:
+                bw //= 2
+            C = apply_factors_pallas(V, T, C, pivot0=c0, block_w=bw, interpret=itp)
+            R = jax.lax.dynamic_update_slice(R, C, (0, c0 + panel))
+    return jnp.triu(R)

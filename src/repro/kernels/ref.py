@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Semantics match ``core.ggr`` exactly; kernels are validated against these in
+``tests/test_kernels.py`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ggr import GGRFactors, apply_ggr_factors, ggr_column_step_at, ggr_factor_column
+
+__all__ = ["ref_panel_factor", "ref_apply_factors", "ref_det2_grid", "ref_suffix_stats"]
+
+
+def ref_suffix_stats(v: jax.Array, X: jax.Array):
+    """(t, S): suffix norms of v and suffix dots of v against columns of X."""
+    f32 = jnp.promote_types(X.dtype, jnp.float32)
+    va = v.astype(f32)
+    t = jnp.sqrt(jnp.cumsum((va * va)[::-1])[::-1])
+    prod = va[:, None] * X.astype(f32)
+    P = jnp.cumsum(prod[::-1], axis=0)[::-1]
+    S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)  # exclusive
+    return t.astype(X.dtype), S.astype(X.dtype)
+
+
+def ref_det2_grid(k: jax.Array, l: jax.Array, S: jax.Array, X: jax.Array):
+    """The RDP DET2 macro-op grid: out_{i+1,j} = k_i s_{ij} - l_i x_{ij}."""
+    return k[:, None] * S - l[:, None] * X
+
+
+def ref_panel_factor(panel: jax.Array, pivot0: int = 0):
+    """Factor an (m, b) panel with pivots pivot0+c; returns (R, V, T)."""
+    m, b = panel.shape
+    X = panel
+    V = jnp.zeros((m, b), panel.dtype)
+    T = jnp.zeros((m, b), panel.dtype)
+    for c in range(b):
+        f = ggr_factor_column(X, c, pivot0 + c)
+        X = ggr_column_step_at(X, c, pivot0 + c)
+        V = V.at[:, c].set(f.v)
+        T = T.at[:, c].set(f.t)
+    return X, V, T
+
+
+def ref_apply_factors(V: jax.Array, T: jax.Array, C: jax.Array, pivot0: int = 0):
+    """Replay b stored GGR column transforms on trailing columns C."""
+    b = V.shape[1]
+    for c in range(b):
+        C = apply_ggr_factors(GGRFactors(v=V[:, c], t=T[:, c]), C, pivot0 + c)
+    return C

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices build the production mesh, every cell
+AOT-compiles through GSPMD, and the compiled artifact yields the roofline
+terms (cost_analysis + collective bytes parsed from post-SPMD HLO).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k \
+        [--multi-pod] [--optimizer adamw] [--seq-parallel] [--out result.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import cell_is_runnable, get_config, get_shape, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.models import serve as serve_mod
+from repro.models.config import SHAPES
+from repro.parallel import MeshRules
+from repro.train.step import make_train_step
+
+# v5e hardware constants for the roofline terms
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*(\(?[a-z0-9\[\],{}\s/#*_:-]+\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\(",
+    re.IGNORECASE,
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]*)\]")
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or line.lstrip().startswith("//"):
+            continue
+        kind = m.group(3).lower()
+        if f" {kind}(" not in line and f"= {kind}(" not in line:
+            # guard against fusion-name false positives like %all-reduce-fusion
+            pass
+        shapes = _SHAPE_RE.findall(line.split("=", 1)[1].split(kind + "(", 1)[0])
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in
+                       ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def depth_units(cfg) -> int:
+    """Depth in homogeneous 'units' (per-family scan trip count)."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        return cfg.n_layers // cfg.slstm_every
+    if cfg.family == "encdec":
+        return cfg.enc_layers  # enc and dec scale together
+    return cfg.n_layers
+
+
+def with_depth(cfg, units: int):
+    """Config with depth set to ``units`` (same widths — per-unit cost equal)."""
+    if cfg.family == "hybrid":
+        return cfg.scaled(n_layers=cfg.attn_every * units)
+    if cfg.family == "ssm":
+        return cfg.scaled(n_layers=cfg.slstm_every * units)
+    if cfg.family == "encdec":
+        return cfg.scaled(n_layers=units, enc_layers=units, dec_layers=units)
+    return cfg.scaled(n_layers=units)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               optimizer: str = "adamw", seq_parallel: bool = False,
+               unroll: bool = False, cfg_override=None, zero1: bool = False):
+    """unroll=True lowers scans fully unrolled so cost_analysis counts every
+    layer/chunk iteration (XLA counts a while body once); execution paths
+    always use rolled scans."""
+    from repro.models import flags as model_flags
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = MeshRules(mesh, sequence_parallel=seq_parallel)
+    if seq_parallel:
+        cfg = cfg.scaled(act_dp_axes=rules.data_axes, act_sp_axis=rules.model_axis)
+    if os.environ.get("REPRO_REMAT_POLICY"):
+        cfg = cfg.scaled(remat_policy=os.environ["REPRO_REMAT_POLICY"])
+    if os.environ.get("REPRO_MOE_GROUPS"):
+        cfg = cfg.scaled(moe_groups=int(os.environ["REPRO_MOE_GROUPS"]))
+    ctx = model_flags.unrolled_scans() if unroll else _null()
+
+    with mesh, ctx:
+        if shape.kind == "train":
+            opt_init, step = make_train_step(cfg, optimizer=optimizer)
+            p_sds = S.param_specs(cfg, rules)
+            o_sds = S.opt_specs(p_sds, cfg, rules, opt_init, zero1=zero1)
+            b_sds = S.batch_specs(cfg, shape, rules)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds)
+        elif shape.kind == "prefill":
+            from repro.train.step import make_loss_fn
+
+            # prefill cost proxy: full forward over the request batch
+            # (cache writes add O(S·kv) on top — negligible next to attention)
+            loss_fn = make_loss_fn(cfg)
+            p_sds = S.param_specs(cfg, rules)
+            b_sds = S.batch_specs(cfg, shape, rules)
+            lowered = jax.jit(lambda p, b: loss_fn(p, b)).lower(p_sds, b_sds)
+        else:  # decode
+            p_sds = S.param_specs(cfg, rules)
+            cache, token, pos = S.decode_specs(cfg, shape, rules)
+
+            def serve_step(params, cache, token, pos):
+                return serve_mod.decode_step(params, cache, token, pos, cfg)
+
+            lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+                p_sds, cache, token, pos
+            )
+    return cfg, shape, mesh, lowered
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def analyze(cfg, shape, mesh, lowered) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        flops, bytes_acc = 0.0, 0.0
+        cost = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+
+    chips = mesh.devices.size
+    # cost_analysis is for the per-device SPMD program
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6 * n_active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2 * n_active * shape.global_batch  # one token
+
+    hlo_flops_total = flops * chips
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": list(mesh.devices.shape),
+        "chips": int(chips),
+        "compile_seconds": round(compile_s, 1),
+        "per_device": {
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_acc,
+            "collective_bytes": coll["total"],
+            "collectives": {k: v for k, v in coll.items() if k not in ("total",)},
+        },
+        "roofline_seconds": {
+            "compute": compute_s,
+            "memory": memory_s,
+            "collective": collective_s,
+            "dominant": dominant,
+        },
+        "model_flops_global": model_flops,
+        "hlo_flops_global": hlo_flops_total,
+        "useful_flops_ratio": model_flops / hlo_flops_total if hlo_flops_total else None,
+        "params": n_params,
+        "active_params": n_active,
+        "memory_analysis": mem_info,
+    }
+
+
+def _extract_costs(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(coll["total"]),
+    )
+
+
+def depth_probe(arch, shape_name, multi_pod, optimizer, seq_parallel,
+                depths=(1, 2), zero1=False):
+    """Exact cost accounting via unrolled reduced-depth compiles.
+
+    Every term of the program is linear in depth-units L (homogeneous layers,
+    depth-independent embed/head/optimizer base), so two unrolled probes at
+    depths (a, b) give per-unit and base costs; extrapolating to the full L
+    recovers what a full unrolled compile would report, at a fraction of the
+    compile time.  (XLA cost_analysis counts while bodies once, hence the
+    probes are unrolled.)
+    """
+    cfg_full = get_config(arch)
+    L = depth_units(cfg_full)
+    a, b = depths
+    if L <= b:
+        a, b = max(1, L - 1), L
+    res = {}
+    for d in (a, b):
+        cfg_d = with_depth(cfg_full, d)
+        _, _, _, lowered = lower_cell(
+            arch, shape_name, multi_pod, optimizer, seq_parallel,
+            unroll=True, cfg_override=cfg_d, zero1=zero1,
+        )
+        res[d] = _extract_costs(lowered)
+    if a == b:
+        per_unit = tuple(0.0 for _ in res[b])
+        base = res[b]
+    else:
+        per_unit = tuple((rb - ra) / (b - a) for ra, rb in zip(res[a], res[b]))
+        base = tuple(rb - b * pu for rb, pu in zip(res[b], per_unit))
+    corrected = tuple(bs + L * pu for bs, pu in zip(base, per_unit))
+    return {
+        "probe_depths": [a, b],
+        "full_depth_units": L,
+        "per_unit": {"flops": per_unit[0], "bytes": per_unit[1], "collective_bytes": per_unit[2]},
+        "corrected_per_device": {
+            "hlo_flops": corrected[0],
+            "hlo_bytes": corrected[1],
+            "collective_bytes": corrected[2],
+        },
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "orthant"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scans for exact cost accounting")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the depth-probe cost correction")
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer moments over the data axes (ZeRO-1)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    ok, why = cell_is_runnable(args.arch, args.shape)
+    if not ok:
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multi_pod, "skipped": why}
+        print(json.dumps(result, indent=2))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=2)
+        return 0
+
+    cfg, shape, mesh, lowered = lower_cell(
+        args.arch, args.shape, args.multi_pod, args.optimizer,
+        args.seq_parallel, args.unroll, zero1=args.zero1
+    )
+    result = analyze(cfg, shape, mesh, lowered)
+    result["multi_pod"] = args.multi_pod
+    result["optimizer"] = args.optimizer
+    result["seq_parallel"] = args.seq_parallel
+    result["unrolled_scans"] = args.unroll
+
+    if not args.no_probe:
+        probe = depth_probe(args.arch, args.shape, args.multi_pod,
+                            args.optimizer, args.seq_parallel, zero1=args.zero1)
+        result["depth_probe"] = probe
+        cpd = probe["corrected_per_device"]
+        compute_s = cpd["hlo_flops"] / PEAK_FLOPS
+        memory_s = cpd["hlo_bytes"] / HBM_BW
+        collective_s = cpd["collective_bytes"] / ICI_BW
+        dominant = max(("compute", compute_s), ("memory", memory_s),
+                       ("collective", collective_s), key=lambda kv: kv[1])[0]
+        result["roofline_seconds_corrected"] = {
+            "compute": compute_s, "memory": memory_s,
+            "collective": collective_s, "dominant": dominant,
+        }
+        total = cpd["hlo_flops"] * result["chips"]
+        result["hlo_flops_global_corrected"] = total
+        result["useful_flops_ratio_corrected"] = (
+            result["model_flops_global"] / total if total else None
+        )
+    print(json.dumps(result, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

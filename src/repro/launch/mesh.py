@@ -1,0 +1,17 @@
+"""Production mesh definitions (functions, not constants — importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds the 2-pod DCN axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (device count must already allow it)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero device allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import serve
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.parallel import MeshRules, batch_spec, param_pspecs
+from repro.parallel.sharding import cache_pspec
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
+    """Input specs for a train/prefill step: the token batch (+ modality
+    frontend stubs: precomputed patch/frame embeddings)."""
+    from repro.parallel.sharding import sanitize_spec
+
+    B, S = shape.global_batch, shape.seq_len
+    mesh = rules.mesh
+    tok = NamedSharding(mesh, sanitize_spec(batch_spec("tokens", rules), (B, S), mesh))
+    out = {
+        "tokens": _sds((B, S), jnp.int32, tok),
+        "labels": _sds((B, S), jnp.int32, tok),
+    }
+    if cfg.family == "vlm":
+        shp = (B, cfg.n_patches, cfg.vision_dim)
+        emb = NamedSharding(mesh, sanitize_spec(batch_spec("patch_embs", rules), shp, mesh))
+        out["patch_embs"] = _sds(shp, jnp.float32, emb)
+    if cfg.family == "encdec":
+        shp = (B, S // cfg.enc_downsample, cfg.d_model)
+        emb = NamedSharding(mesh, sanitize_spec(batch_spec("frames", rules), shp, mesh))
+        out["frames"] = _sds(shp, jnp.float32, emb)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
+    """(cache, token, pos) specs for one serve_step decode token."""
+    B, S = shape.global_batch, shape.seq_len
+    mesh = rules.mesh
+    spec_fn = cache_pspec(cfg, rules, B)
+    cache_shapes = serve.cache_spec(cfg, B, S)
+    cache = jax.tree_util.tree_map_with_path(
+        lambda path, s: _sds(s.shape, s.dtype, NamedSharding(mesh, spec_fn(path, s))),
+        cache_shapes,
+    )
+    dp = rules.data_axes
+    dp = dp if len(dp) > 1 else dp[0]
+    tok_spec = P(dp) if B % _dp_size(rules) == 0 else P()
+    token = _sds((B,), jnp.int32, NamedSharding(mesh, tok_spec))
+    pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return cache, token, pos
+
+
+def _dp_size(rules: MeshRules) -> int:
+    n = 1
+    for a in rules.data_axes:
+        n *= rules.mesh.shape[a]
+    return n
+
+
+def param_specs(cfg: ArchConfig, rules: MeshRules):
+    """Sharded ShapeDtypeStructs for params (and optimizer state) — built via
+    eval_shape, so nothing is ever allocated."""
+    import jax.random as jr
+
+    from repro.models import encdec as encdec_mod
+    from repro.models import transformer as tmod
+
+    key = jr.PRNGKey(0)
+    init_fn = (
+        (lambda: encdec_mod.init_encdec(cfg, key))
+        if cfg.family == "encdec"
+        else (lambda: tmod.init_lm(cfg, key))
+    )
+    shapes = jax.eval_shape(init_fn)
+    specs = param_pspecs(shapes, cfg, rules)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, NamedSharding(rules.mesh, sp)),
+        shapes,
+        specs,
+    )
+
+
+def opt_specs(params_sds, cfg: ArchConfig, rules: MeshRules, opt_init, zero1: bool = False):
+    """Optimizer-state specs; ``zero1`` additionally shards the moments over
+    the data axes (ZeRO-1): the update runs on 1/DP of each moment and GSPMD
+    all-gathers the refreshed parameter shards — required to fit archs like
+    arctic-480b (3x f32 moments would not fit replicated)."""
+    shapes = jax.eval_shape(opt_init, params_sds)
+    specs = param_pspecs(shapes, cfg, rules)
+    if zero1:
+        dp_size = _dp_size(rules)
+        dp = rules.data_axes if len(rules.data_axes) > 1 else rules.data_axes[0]
+
+        def add_dp(sp, s):
+            if s.ndim == 0:
+                return sp
+            entries = list(sp) + [None] * (s.ndim - len(sp))
+            for d in range(s.ndim):
+                if entries[d] is None and s.shape[d] % dp_size == 0 and s.shape[d] >= dp_size:
+                    entries[d] = dp
+                    break
+            return P(*entries)
+
+        specs = jax.tree.map(lambda sp, s: add_dp(sp, s), specs, shapes)
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, NamedSharding(rules.mesh, sp)),
+        shapes,
+        specs,
+    )

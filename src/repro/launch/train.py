@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+On a real cluster every host runs this under its own process with
+jax.distributed auto-initialized by the TPU runtime; the mesh spans all
+chips.  On CPU it builds a debug mesh so the same code path is exercised.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 20 \
+        --smoke --mesh 1x1
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.train import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "orthant"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="1x1",
+                    help="'DxM' debug mesh, 'prod' (16x16) or 'prod2' (2x16x16)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--grad-compression", default=None, choices=[None, "int8_ef"])
+    args = ap.parse_args()
+
+    if args.mesh == "prod":
+        mesh = make_production_mesh()
+    elif args.mesh == "prod2":
+        mesh = make_production_mesh(multi_pod=True)
+    else:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_debug_mesh(d, m) if d * m <= len(jax.devices()) else None
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tr = Trainer(
+        cfg,
+        mesh=mesh,
+        optimizer=args.optimizer,
+        lr=args.lr,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        accum=args.accum,
+        ckpt_dir=args.ckpt_dir,
+        grad_compression=args.grad_compression,
+    )
+    losses = tr.run(args.steps)
+    print(f"done: {args.steps} steps, final loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

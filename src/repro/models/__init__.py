@@ -1,0 +1,4 @@
+"""Model zoo: dense GQA transformers, MoE, xLSTM, Mamba2 hybrids, enc-dec."""
+from .config import ArchConfig, ShapeConfig, SHAPES
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES"]

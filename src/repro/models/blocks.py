@@ -1,0 +1,302 @@
+"""Shared model blocks: norms, RoPE, chunked causal attention, MLP, MoE.
+
+Everything is shape-static, scan-friendly, and written so XLA/GSPMD can shard
+it over the (pod, data, model) mesh without manual collectives.  Memory-bound
+choices (chunked attention, capacity-based MoE dispatch) are what make the
+32k-prefill and 500k-decode cells lowerable at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flags
+from .config import ArchConfig
+
+
+def constrain_act(h, cfg: ArchConfig):
+    """Between-block activation sharding constraint (SP when act_sp_axis set).
+
+    With sequence parallelism the residual stream lives sharded over the
+    model axis on the sequence dim; GSPMD then turns each TP all-reduce into
+    a reduce-scatter here + all-gather at the next matmul (half the bytes,
+    and norms/elementwise run on 1/P of the tokens).
+    """
+    if cfg.act_sp_axis is None or cfg.act_dp_axes is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    dp = cfg.act_dp_axes if len(cfg.act_dp_axes) > 1 else cfg.act_dp_axes[0]
+    return jax.lax.with_sharding_constraint(h, P(dp, cfg.act_sp_axis, None))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ArchConfig, key=None):
+    if cfg.norm == "nonparam":  # olmo: non-parametric LayerNorm
+        return {}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.pdt)}
+
+
+def apply_norm(params, x, cfg: ArchConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    elif cfg.norm == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    elif cfg.norm == "nonparam":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(cfg.norm)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ArchConfig):
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    return inv  # (hd/2,)
+
+
+def apply_rope(x, positions, inv_freqs):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    ang = positions[..., None].astype(jnp.float32) * inv_freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(kq, (d, cfg.n_heads * hd)) * s).astype(cfg.pdt),
+        "wk": (jax.random.normal(kk, (d, cfg.n_kv_heads * hd)) * s).astype(cfg.pdt),
+        "wv": (jax.random.normal(kv, (d, cfg.n_kv_heads * hd)) * s).astype(cfg.pdt),
+        "wo": (jax.random.normal(ko, (cfg.n_heads * hd, d)) * s).astype(cfg.pdt),
+    }
+
+
+def _chunked_causal_attention(q, k, v, window: Optional[int], chunk: int):
+    """Flash-style chunked attention: scan over KV chunks, online softmax.
+
+    q: (B, S, H, D); k, v: (B, S, Hkv, D).  O(S·chunk) live memory.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, S, Hkv, G, D)
+
+    nchunks = S // chunk
+    kc = k.astype(jnp.float32).reshape(B, nchunks, chunk, Hkv, D)
+    vc = v.astype(jnp.float32).reshape(B, nchunks, chunk, Hkv, D)
+    q_pos = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        kv_pos = j * chunk + jnp.arange(chunk)
+        # scores: (B, S, Hkv, G, chunk)
+        s_ = jnp.einsum("bshgd,bchd->bshgc", qf, kj)
+        mask = q_pos[:, None] >= kv_pos[None, :]  # causal
+        if window is not None:
+            mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+        s_ = jnp.where(mask[None, :, None, None, :], s_, -jnp.inf)
+        m_new = jnp.maximum(m, s_.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> nan
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s_ - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bshgc,bchd->bshgd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, D), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc_t, vc_t, jnp.arange(nchunks)), unroll=flags.scan_unroll()
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention_fwd(params, h, cfg: ArchConfig, positions=None, chunk: int = 512):
+    """Full (training/prefill) self-attention with RoPE + GQA (+ SWA)."""
+    B, S, d = h.shape
+    hd = cfg.head_dim
+    x = h.astype(cfg.cdt)
+    q = (x @ params["wq"].astype(cfg.cdt)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(cfg.cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(cfg.cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    inv = rope_freqs(cfg)
+    q = apply_rope(q, positions, inv)
+    k = apply_rope(k, positions, inv)
+    ck = min(chunk, S)
+    while S % ck:
+        ck //= 2
+    out = _chunked_causal_attention(q, k, v, cfg.swa_window, ck)
+    return (out.reshape(B, S, -1) @ params["wo"].astype(cfg.cdt)).astype(h.dtype)
+
+
+def attention_decode(params, h, cache_k, cache_v, pos, cfg: ArchConfig):
+    """One-token decode: h (B, 1, d); cache (B, Smax, Hkv, D); pos scalar.
+
+    Returns (out, new_cache_k, new_cache_v).  For SWA archs the cache is a
+    ring buffer of size window; positions wrap modulo the window.
+    """
+    B, _, d = h.shape
+    hd = cfg.head_dim
+    Smax = cache_k.shape[1]
+    x = h.astype(cfg.cdt)
+    q = (x @ params["wq"].astype(cfg.cdt)).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(cfg.cdt)).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(cfg.cdt)).reshape(B, 1, cfg.n_kv_heads, hd)
+    inv = rope_freqs(cfg)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, inv)
+    k = apply_rope(k, posb, inv)
+
+    slot = (pos % Smax).astype(jnp.int32)  # ring write (no-op ring when Smax >= S)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = (q * hd ** -0.5).astype(jnp.float32).reshape(B, cfg.n_kv_heads, G, hd)
+    kf = ck.astype(jnp.float32)
+    s_ = jnp.einsum("bhgd,bshd->bhgs", qf, kf)  # (B, Hkv, G, Smax)
+    idx = jnp.arange(Smax)
+    # pre-wrap: only slots <= pos are live; post-wrap (ring): all slots live
+    valid = jnp.where(pos < Smax, idx <= pos, jnp.ones_like(idx, bool))
+    s_ = jnp.where(valid[None, None, None, :], s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(cfg.cdt)
+    return (out @ params["wo"].astype(cfg.cdt)).astype(h.dtype), ck, cv
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d, ff)) * s).astype(cfg.pdt),
+        "w2": (jax.random.normal(k2, (ff, d)) * ff ** -0.5).astype(cfg.pdt),
+    }
+    if cfg.activation != "sq_relu":  # gated variants carry w3
+        p["w3"] = (jax.random.normal(k3, (d, ff)) * s).astype(cfg.pdt)
+    return p
+
+
+def mlp_fwd(params, h, cfg: ArchConfig):
+    x = h.astype(cfg.cdt)
+    a = x @ params["w1"].astype(cfg.cdt)
+    if cfg.activation == "sq_relu":  # nemotron: squared ReLU, ungated
+        inner = jnp.square(jax.nn.relu(a))
+    else:
+        g = jax.nn.silu(a) if cfg.activation == "silu" else jax.nn.gelu(a)
+        inner = g * (x @ params["w3"].astype(cfg.cdt))
+    return (inner @ params["w2"].astype(cfg.cdt)).astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based scatter dispatch + batched expert GEMM)
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ArchConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, E)) * s).astype(jnp.float32),
+        "w1": (jax.random.normal(k1, (E, d, ff)) * s).astype(cfg.pdt),
+        "w2": (jax.random.normal(k2, (E, ff, d)) * ff ** -0.5).astype(cfg.pdt),
+        "w3": (jax.random.normal(k3, (E, d, ff)) * s).astype(cfg.pdt),
+    }
+    return p
+
+
+def moe_fwd(params, h, cfg: ArchConfig):
+    """Top-k routed experts, GShard-style grouped capacity dispatch.
+
+    Tokens are split into ``moe_groups`` groups (aligned with the data
+    shards); capacity, sort, scatter and gather are all per-group, so the
+    dispatch stays shard-local under GSPMD — the naive single-group variant
+    forces an all-reduce of the whole (E, C, d) dispatch buffer across data
+    shards (measured 469 GB/device/layer on mixtral train_4k, §Perf B2).
+    Expert compute is one batched GEMM (G, E, Cg, d) @ (E, d, f).
+    """
+    B, S, d = h.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = max(1, min(cfg.moe_groups, T))
+    while T % G:
+        G //= 2
+    Tg = T // G
+    Cg = max(4, int(cfg.capacity_factor * k * Tg / E + 0.5))
+    x = h.reshape(G, Tg, d).astype(cfg.cdt)
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (G, Tg, E)
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(gate_all, k)  # (G, Tg, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = ids.reshape(G, Tg * k).astype(jnp.int32)
+    # rank of each (token, slot) within its expert, per group
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(sorted_ids)
+    ranks = jnp.arange(Tg * k)[None, :] - first
+    pos = jnp.zeros((G, Tg * k), jnp.int32)
+    pos = jax.vmap(lambda p, o, r: p.at[o].set(r))(pos, order, ranks)
+    keep = pos < Cg
+
+    tok_idx = jnp.arange(Tg * k) // k
+    src = jnp.where(keep[..., None], x[:, tok_idx, :], 0.0)  # (G, Tg*k, d)
+    slot = jnp.where(keep, pos, Cg - 1)
+    disp = jnp.zeros((G, E, Cg, d), cfg.cdt)
+    disp = jax.vmap(lambda dd, e, s, v: dd.at[e, s].add(v))(disp, flat_ids, slot, src)
+
+    a = jnp.einsum("gecd,edf->gecf", disp, params["w1"].astype(cfg.cdt))
+    if cfg.activation == "sq_relu":
+        inner = jnp.square(jax.nn.relu(a))
+    else:
+        g = jax.nn.silu(a) if cfg.activation == "silu" else jax.nn.gelu(a)
+        inner = g * jnp.einsum("gecd,edf->gecf", disp, params["w3"].astype(cfg.cdt))
+    eo = jnp.einsum("gecf,efd->gecd", inner, params["w2"].astype(cfg.cdt))
+
+    # combine: per-group gather of each (token, slot)'s expert output
+    gathered = jax.vmap(lambda ee, e, s: ee[e, jnp.clip(s, 0, Cg - 1)])(
+        eo, flat_ids, pos
+    )  # (G, Tg*k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    weighted = gathered * gates.reshape(G, Tg * k, 1).astype(cfg.cdt)
+    out = weighted.reshape(G, Tg, k, d).sum(axis=2)
+    return out.reshape(B, S, d).astype(h.dtype)

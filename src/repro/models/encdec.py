@@ -1,0 +1,159 @@
+"""Encoder-decoder backbone (seamless-m4t): speech encoder (stub frames) +
+text decoder with cross-attention.  Scanned layers throughout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, flags
+from .config import ArchConfig
+
+
+def _init_cross_attention(key, cfg: ArchConfig):
+    return blocks.init_attention(key, cfg)
+
+
+def _init_enc_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": blocks.init_attention(k1, cfg),
+        "mlp": blocks.init_mlp(k2, cfg),
+        "n1": blocks.init_norm(cfg),
+        "n2": blocks.init_norm(cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn": blocks.init_attention(k1, cfg),
+        "xattn": _init_cross_attention(k2, cfg),
+        "mlp": blocks.init_mlp(k3, cfg),
+        "n1": blocks.init_norm(cfg),
+        "n2": blocks.init_norm(cfg),
+        "n3": blocks.init_norm(cfg),
+    }
+
+
+def init_encdec(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, 6)
+    s = cfg.d_model ** -0.5
+    ekeys = jax.random.split(keys[0], cfg.enc_layers)
+    dkeys = jax.random.split(keys[1], cfg.dec_layers)
+    return {
+        "embed": (jax.random.normal(keys[2], (cfg.vocab, cfg.d_model)) * s).astype(cfg.pdt),
+        "lm_head": (jax.random.normal(keys[3], (cfg.d_model, cfg.vocab)) * s).astype(cfg.pdt),
+        "frame_proj": (jax.random.normal(keys[4], (cfg.d_model, cfg.d_model)) * s).astype(cfg.pdt),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ekeys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dkeys),
+        "enc_norm": blocks.init_norm(cfg),
+        "final_norm": blocks.init_norm(cfg),
+    }
+
+
+def _bidir_attention(params, h, cfg: ArchConfig):
+    """Encoder self-attention: bidirectional — reuse chunked kernel w/o mask
+    by attending over the full sequence (windowless, non-causal)."""
+    B, S, d = h.shape
+    hd = cfg.head_dim
+    x = h.astype(cfg.cdt)
+    q = (x @ params["wq"].astype(cfg.cdt)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(cfg.cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(cfg.cdt)).reshape(B, S, cfg.n_kv_heads, hd)
+    pos = jnp.arange(S)[None, :]
+    inv = blocks.rope_freqs(cfg)
+    q = blocks.apply_rope(q, pos, inv)
+    k = blocks.apply_rope(k, pos, inv)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = (q * hd ** -0.5).astype(jnp.float32).reshape(B, S, cfg.n_kv_heads, G, hd)
+    s_ = jnp.einsum("bshgd,bthd->bshgt", qf, k.astype(jnp.float32))
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    o = o.reshape(B, S, -1).astype(cfg.cdt)
+    return (o @ params["wo"].astype(cfg.cdt)).astype(h.dtype)
+
+
+def cross_attention(params, h, enc_out, cfg: ArchConfig):
+    B, S, d = h.shape
+    Se = enc_out.shape[1]
+    hd = cfg.head_dim
+    x = h.astype(cfg.cdt)
+    e = enc_out.astype(cfg.cdt)
+    q = (x @ params["wq"].astype(cfg.cdt)).reshape(B, S, cfg.n_heads, hd)
+    k = (e @ params["wk"].astype(cfg.cdt)).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = (e @ params["wv"].astype(cfg.cdt)).reshape(B, Se, cfg.n_kv_heads, hd)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = (q * hd ** -0.5).astype(jnp.float32).reshape(B, S, cfg.n_kv_heads, G, hd)
+    s_ = jnp.einsum("bshgd,bthd->bshgt", qf, k.astype(jnp.float32))
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    o = o.reshape(B, S, -1).astype(cfg.cdt)
+    return (o @ params["wo"].astype(cfg.cdt)).astype(h.dtype)
+
+
+def _xattn_decode(params, h, xk, xv, cfg: ArchConfig):
+    """Cross-attention for one decoder token against precomputed encoder KV."""
+    B, _, d = h.shape
+    hd = cfg.head_dim
+    q = (h.astype(cfg.cdt) @ params["wq"].astype(cfg.cdt)).reshape(B, cfg.n_heads, hd)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = (q * hd ** -0.5).astype(jnp.float32).reshape(B, cfg.n_kv_heads, G, hd)
+    s_ = jnp.einsum("bhgd,bshd->bhgs", qf, xk.astype(jnp.float32))
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, xv.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * hd).astype(cfg.cdt)
+    return (o @ params["wo"].astype(cfg.cdt)).astype(h.dtype)
+
+
+def precompute_cross_kv(params, enc_out, cfg: ArchConfig):
+    """Per-decoder-layer cross-attention K/V from encoder output (cache fill)."""
+    B, Se, _ = enc_out.shape
+    hd = cfg.head_dim
+
+    def per_layer(lp):
+        e = enc_out.astype(cfg.cdt)
+        k = (e @ lp["xattn"]["wk"].astype(cfg.cdt)).reshape(B, Se, cfg.n_kv_heads, hd)
+        v = (e @ lp["xattn"]["wv"].astype(cfg.cdt)).reshape(B, Se, cfg.n_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, S_enc, d_model) stub frame embeddings (modality frontend)."""
+    h = (frames.astype(cfg.cdt) @ params["frame_proj"].astype(cfg.cdt))
+
+    @jax.checkpoint
+    def body(h, lp):
+        a = _bidir_attention(lp["attn"], blocks.apply_norm(lp["n1"], h, cfg), cfg)
+        h = h + a
+        h = h + blocks.mlp_fwd(lp["mlp"], blocks.apply_norm(lp["n2"], h, cfg), cfg)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"], unroll=flags.scan_unroll())
+    return blocks.apply_norm(params["enc_norm"], h, cfg)
+
+
+def decode_train(params, tokens, enc_out, cfg: ArchConfig):
+    h = params["embed"].astype(cfg.cdt)[tokens]
+
+    @jax.checkpoint
+    def body(h, lp):
+        a = blocks.attention_fwd(lp["attn"], blocks.apply_norm(lp["n1"], h, cfg), cfg)
+        h = h + a
+        x = cross_attention(lp["xattn"], blocks.apply_norm(lp["n2"], h, cfg), enc_out, cfg)
+        h = h + x
+        h = h + blocks.mlp_fwd(lp["mlp"], blocks.apply_norm(lp["n3"], h, cfg), cfg)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["dec_layers"], unroll=flags.scan_unroll())
+    return blocks.apply_norm(params["final_norm"], h, cfg)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig):
+    """batch: frames (B, S_enc, d), tokens (B, S), labels (B, S)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    h = decode_train(params, batch["tokens"], enc_out, cfg)
+    from .transformer import chunked_xent
+
+    return chunked_xent(params, h, batch["labels"], cfg)

@@ -1,0 +1,30 @@
+"""Trace-time flags.
+
+SCAN_UNROLL: when True, layer/chunk scans lower fully unrolled.  XLA's HLO
+cost analysis counts a while-loop body ONCE (trip counts are dynamic to it),
+so the dry-run re-lowers with unrolled scans to get true per-step FLOP/byte/
+collective totals.  Execution paths always keep rolled scans (compile size).
+The sLSTM time-step scan is exempt (unrolling 32k time steps is not viable);
+its contribution is corrected analytically in the roofline notes.
+"""
+from __future__ import annotations
+
+import contextlib
+
+SCAN_UNROLL = False
+
+
+def scan_unroll():
+    """Value to pass as jax.lax.scan(..., unroll=...)."""
+    return True if SCAN_UNROLL else 1
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global SCAN_UNROLL
+    prev = SCAN_UNROLL
+    SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        SCAN_UNROLL = prev

@@ -1,0 +1,195 @@
+"""Serving: KV-cache / recurrent-state containers + one-token decode steps.
+
+``decode_*`` lower the ``serve_step`` for the decode_32k / long_500k cells:
+one new token against a cache of ``seq_len`` (ring-buffered to the window for
+SWA archs; O(1) recurrent state for SSM/hybrid archs — which is exactly why
+those families are the ones that run the 500k cell).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, ssm
+from .config import ArchConfig
+
+
+def cache_spec(cfg: ArchConfig, batch: int, seq_len: int, dtype=None):
+    """ShapeDtypeStructs for the decode cache (used by input_specs)."""
+    dt = dtype or cfg.cdt
+    hd = cfg.head_dim
+    S = min(seq_len, cfg.swa_window) if cfg.swa_window else seq_len
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, hd)
+        return {"k": jax.ShapeDtypeStruct(shape, dt), "v": jax.ShapeDtypeStruct(shape, dt)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        di = cfg.ssm_expand * cfg.d_model
+        H = max(1, di // 64)
+        kv = (n_groups, batch, S, cfg.n_kv_heads, hd)
+        return {
+            "k": jax.ShapeDtypeStruct(kv, dt),
+            "v": jax.ShapeDtypeStruct(kv, dt),
+            "conv": jax.ShapeDtypeStruct(
+                (n_groups, cfg.attn_every, batch, cfg.ssm_conv - 1, di), dt
+            ),
+            "ssm": jax.ShapeDtypeStruct(
+                (n_groups, cfg.attn_every, batch, H, cfg.ssm_state, di // H), jnp.float32
+            ),
+        }
+    if cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        H = cfg.n_heads
+        hd2 = cfg.d_model // H
+        return {
+            "mlstm": jax.ShapeDtypeStruct(
+                (n_groups, n_m, batch, H, hd2, hd2 + 1), jnp.float32
+            ),
+            "slstm": jax.ShapeDtypeStruct((n_groups, 2, batch, cfg.d_model), jnp.float32),
+        }
+    if cfg.family == "encdec":
+        S_enc = seq_len // cfg.enc_downsample
+        kv = (cfg.dec_layers, batch, S, cfg.n_kv_heads, hd)
+        xkv = (cfg.dec_layers, batch, S_enc, cfg.n_kv_heads, hd)
+        return {
+            "k": jax.ShapeDtypeStruct(kv, dt),
+            "v": jax.ShapeDtypeStruct(kv, dt),
+            "xk": jax.ShapeDtypeStruct(xkv, dt),
+            "xv": jax.ShapeDtypeStruct(xkv, dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, seq_len))
+
+
+# ---------------------------------------------------------------------------
+# decode steps
+# ---------------------------------------------------------------------------
+def decode_dense(params, cache, token, pos, cfg: ArchConfig):
+    """One-token step for dense/moe/vlm. token: (B,) int32; pos: scalar int32."""
+    B = token.shape[0]
+    h = params["embed"].astype(cfg.cdt)[token][:, None, :]  # (B, 1, d)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        a, nk, nv = blocks.attention_decode(
+            lp["attn"], blocks.apply_norm(lp["n1"], h, cfg), ck, cv, pos, cfg
+        )
+        h = h + a
+        hn = blocks.apply_norm(lp["n2"], h, cfg)
+        if cfg.family == "moe":
+            delta = blocks.moe_fwd(lp["moe"], hn, cfg)
+            if cfg.moe_dense_residual:
+                delta = delta + blocks.mlp_fwd(
+                    lp["mlp"], blocks.apply_norm(lp["n3"], h, cfg), cfg
+                )
+        else:
+            delta = blocks.mlp_fwd(lp["mlp"], hn, cfg)
+        return h + delta, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    from .transformer import lm_head
+
+    logits = lm_head(params, h, cfg)[:, 0, :]
+    return logits, {"k": nk, "v": nv}
+
+
+def decode_hybrid(params, cache, token, pos, cfg: ArchConfig):
+    h = params["embed"].astype(cfg.cdt)[token][:, None, :]
+    shared_attn, shared_norm = params["shared_attn"], params["shared_norm"]
+
+    def group_body(h, xs):
+        gp, ck, cv, conv, sstate = xs
+        a, nk, nv = blocks.attention_decode(
+            shared_attn, blocks.apply_norm(shared_norm, h, cfg), ck, cv, pos, cfg
+        )
+        h = h + a
+
+        def mamba_body(h, ms):
+            mp, cst, sst = ms
+            o, ncv, nss = ssm.mamba2_fwd(
+                mp["m"], blocks.apply_norm(mp["n"], h, cfg), cfg,
+                conv_state=cst, ssm_state=sst, decode=True,
+            )
+            return h + o, (ncv, nss)
+
+        h, (nconv, nssm) = jax.lax.scan(
+            mamba_body, h, ({"m": gp["mamba"], "n": gp["norms"]}, conv, sstate)
+        )
+        return h, (nk, nv, nconv, nssm)
+
+    h, (nk, nv, nconv, nssm) = jax.lax.scan(
+        group_body, h, (params["groups"], cache["k"], cache["v"], cache["conv"], cache["ssm"])
+    )
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    from .transformer import lm_head
+
+    logits = lm_head(params, h, cfg)[:, 0, :]
+    return logits, {"k": nk, "v": nv, "conv": nconv, "ssm": nssm}
+
+
+def decode_xlstm(params, cache, token, pos, cfg: ArchConfig):
+    h = params["embed"].astype(cfg.cdt)[token][:, None, :]
+
+    def group_body(h, xs):
+        gp, mstate, sstate = xs
+
+        def m_body(h, ms):
+            mp, st = ms
+            o, nst = ssm.mlstm_fwd(mp, h, cfg, state=st, decode=True)
+            return h + o, nst
+
+        h, nm = jax.lax.scan(m_body, h, (gp["mlstm"], mstate))
+        o, ns = ssm.slstm_fwd(gp["slstm"], h, cfg, state=sstate, decode=True)
+        return h + o, (nm, ns)
+
+    h, (nm, ns) = jax.lax.scan(group_body, h, (params["groups"], cache["mlstm"], cache["slstm"]))
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    from .transformer import lm_head
+
+    logits = lm_head(params, h, cfg)[:, 0, :]
+    return logits, {"mlstm": nm, "slstm": ns}
+
+
+def decode_encdec(params, cache, token, pos, cfg: ArchConfig):
+    """Decoder step with self-attn KV cache + precomputed cross-attn KV."""
+    from .encdec import _xattn_decode
+
+    h = params["embed"].astype(cfg.cdt)[token][:, None, :]
+
+    def body(h, xs):
+        lp, ck, cv, xk, xv = xs
+        a, nk, nv = blocks.attention_decode(
+            lp["attn"], blocks.apply_norm(lp["n1"], h, cfg), ck, cv, pos, cfg
+        )
+        h = h + a
+        x = _xattn_decode(lp["xattn"], blocks.apply_norm(lp["n2"], h, cfg), xk, xv, cfg)
+        h = h + x
+        h = h + blocks.mlp_fwd(lp["mlp"], blocks.apply_norm(lp["n3"], h, cfg), cfg)
+        return h, (nk, nv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    h = blocks.apply_norm(params["final_norm"], h, cfg)
+    logits = (h.astype(cfg.cdt) @ params["lm_head"].astype(cfg.cdt))[:, 0, :]
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+def decode_step(params, cache, token, pos, cfg: ArchConfig):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return decode_dense(params, cache, token, pos, cfg)
+    if fam == "hybrid":
+        return decode_hybrid(params, cache, token, pos, cfg)
+    if fam == "ssm":
+        return decode_xlstm(params, cache, token, pos, cfg)
+    if fam == "encdec":
+        return decode_encdec(params, cache, token, pos, cfg)
+    raise ValueError(fam)

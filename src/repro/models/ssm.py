@@ -1,0 +1,261 @@
+"""SSM-family blocks: chunked gated linear attention (the SSD/mLSTM common
+core), Mamba2 blocks, and xLSTM (mLSTM + sLSTM) blocks.
+
+``chunked_gla`` implements  S_t = a_t S_{t-1} + k_t v_tᵀ ;  o_t = S_tᵀ q_t
+in the chunk-parallel form (intra-chunk decay-masked attention + inter-chunk
+state carry).  Mamba2's SSD (scalar per-head decay) and xLSTM's mLSTM
+(forget/input gates) are both parameterizations of this primitive, so the
+500k-token decode cells reduce to an O(1) recurrent-state update.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flags
+from .config import ArchConfig
+
+
+def chunked_gla(q, k, v, log_a, chunk: int | None = None):
+    """Gated linear attention, chunk-parallel.
+
+    q, k: (B, S, H, Dk); v: (B, S, H, Dv); log_a: (B, S, H) per-step decay
+    (log of a_t in (0, 1]).  Returns o: (B, S, H, Dv) and final state
+    (B, H, Dk, Dv).
+
+    Chunk size scales with S (>= 128, <= 512) so the scan stays <= ~64 steps —
+    keeps unrolled-probe compiles bounded at 32k+ sequence lengths while the
+    (C, C) intra-chunk tile still fits VMEM-scale working sets.
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    if chunk is None:
+        chunk = max(128, min(512, S // 64))
+    C = min(chunk, S)
+    while S % C:
+        C //= 2
+    n = S // C
+
+    qf = q.astype(jnp.float32).reshape(B, n, C, H, Dk)
+    kf = k.astype(jnp.float32).reshape(B, n, C, H, Dk)
+    vf = v.astype(jnp.float32).reshape(B, n, C, H, Dv)
+    la = log_a.astype(jnp.float32).reshape(B, n, C, H)
+
+    def body(S_prev, inp):
+        qc, kc, vc, lac = inp  # (B, C, H, ...)
+        A = jnp.cumsum(lac, axis=1)  # (B, C, H) inclusive cumulative log-decay
+        Atot = A[:, -1:, :]  # (B, 1, H)
+        # intra-chunk: scores_ij = exp(A_i - A_j) q_i·k_j  for j <= i
+        scores = jnp.einsum("bihd,bjhd->bhij", qc, kc)
+        decay = A[:, :, None, :] - A[:, None, :, :]  # (B, i, j, H)
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0)
+        intra = jnp.einsum("bhij,bijh,bjhv->bihv", scores, w, vc)
+        # inter-chunk: o_i += exp(A_i) q_i · S_prev
+        inter = jnp.einsum("bihd,bhdv->bihv", qc * jnp.exp(A)[..., None], S_prev)
+        # state: S_new = exp(Atot) S_prev + sum_j exp(Atot - A_j) k_j v_j^T
+        kdec = kc * jnp.exp(Atot - A)[..., None]
+        S_new = jnp.exp(Atot)[..., None].transpose(0, 2, 1, 3) * S_prev + jnp.einsum(
+            "bjhd,bjhv->bhdv", kdec, vc
+        )
+        return S_new, intra + inter
+
+    S0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    qs = jnp.moveaxis(qf, 1, 0)
+    ks = jnp.moveaxis(kf, 1, 0)
+    vs = jnp.moveaxis(vf, 1, 0)
+    las = jnp.moveaxis(la, 1, 0)
+    S_fin, outs = jax.lax.scan(body, S0, (qs, ks, vs, las), unroll=flags.scan_unroll())
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, Dv)
+    return o.astype(v.dtype), S_fin
+
+
+def gla_decode_step(S_prev, q, k, v, log_a):
+    """One-token recurrent update: q,k (B,H,Dk), v (B,H,Dv), log_a (B,H)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    S_new = a * S_prev + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    o = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), S_new)
+    return S_new, o.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def init_mamba2(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = max(1, di // 64)  # 64-dim heads (mamba2 default)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * cfg.ssm_state * H + H)) * s).astype(cfg.pdt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(cfg.pdt),
+        "A_log": jnp.zeros((H,), cfg.pdt),
+        "D": jnp.ones((H,), cfg.pdt),
+        "dt_bias": jnp.zeros((H,), cfg.pdt),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * (di ** -0.5)).astype(cfg.pdt),
+    }
+
+
+def _mamba_split(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = max(1, di // 64)
+    N = cfg.ssm_state
+    return di, H, N
+
+
+def mamba2_fwd(params, h, cfg: ArchConfig, conv_state=None, ssm_state=None, decode=False):
+    """Mamba2 SSD block. Training path uses chunked_gla; decode is O(1)."""
+    B = h.shape[0]
+    di, H, N = _mamba_split(cfg)
+    hd = di // H
+    x = h.astype(cfg.cdt)
+    z_x_B_C_dt = x @ params["in_proj"].astype(cfg.cdt)
+    z, xin, Bv, Cv, dt = jnp.split(
+        z_x_B_C_dt, [di, 2 * di, 2 * di + N * H, 2 * di + 2 * N * H], axis=-1
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+
+    if not decode:
+        S = h.shape[1]
+        # causal depthwise conv over time
+        w = params["conv_w"].astype(cfg.cdt)
+        xpad = jnp.pad(xin, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+        xc = sum(xpad[:, i : i + S, :] * w[i] for i in range(cfg.ssm_conv))
+        xc = jax.nn.silu(xc)
+        qk_shape = (B, S, H, N)
+        q = Cv.reshape(*qk_shape)
+        k = Bv.reshape(*qk_shape)
+        v = (xc * dt.repeat(hd, axis=-1)).reshape(B, S, H, hd)
+        log_a = dt * A  # (B, S, H)
+        o, _ = chunked_gla(q, k, v, log_a)
+        o = o.reshape(B, S, di) + xc * params["D"].astype(cfg.cdt).repeat(hd, -1)
+        o = o * jax.nn.silu(z)
+        return (o @ params["out_proj"].astype(cfg.cdt)).astype(h.dtype), None, None
+
+    # decode: single token, recurrent state (B, H, N, hd), conv state (B, K-1, di)
+    w = params["conv_w"].astype(cfg.cdt)
+    K = cfg.ssm_conv
+    xin1 = xin[:, 0]  # (B, di)
+    conv_buf = jnp.concatenate([conv_state, xin1[:, None, :]], axis=1)  # (B, K, di)
+    xc = jax.nn.silu((conv_buf * w[None]).sum(axis=1))
+    new_conv = conv_buf[:, 1:]
+    q = Cv[:, 0].reshape(B, H, N)
+    k = Bv[:, 0].reshape(B, H, N)
+    v = (xc * dt[:, 0].repeat(hd, -1)).reshape(B, H, hd)
+    log_a = (dt[:, 0] * A)  # (B, H)
+    new_state, o = gla_decode_step(ssm_state, q, k, v, log_a)
+    o = o.reshape(B, 1, di) + (xc * params["D"].astype(cfg.cdt).repeat(hd, -1))[:, None]
+    o = o * jax.nn.silu(z)
+    return (o @ params["out_proj"].astype(cfg.cdt)).astype(h.dtype), new_conv, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "wqkv": (jax.random.normal(ks[0], (d, 3 * d)) * s).astype(cfg.pdt),
+        "wgate": (jax.random.normal(ks[1], (d, 2 * H)) * s).astype(cfg.pdt),
+        "wo": (jax.random.normal(ks[2], (d, d)) * s).astype(cfg.pdt),
+        "wup": (jax.random.normal(ks[3], (d, 2 * d)) * s).astype(cfg.pdt),
+        "wdown": (jax.random.normal(ks[4], (d, d)) * d ** -0.5).astype(cfg.pdt),
+    }
+
+
+def mlstm_fwd(params, h, cfg: ArchConfig, state=None, decode=False):
+    """mLSTM: matrix-memory LSTM == GLA with sigmoid forget / exp input gate.
+
+    The input gate is folded into k, the normalizer is tracked as an extra
+    value column (v augmented with ones), per the xLSTM stabilization.
+    """
+    B = h.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    x = h.astype(cfg.cdt)
+    qkv = x @ params["wqkv"].astype(cfg.cdt)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = (x.astype(jnp.float32) @ params["wgate"].astype(jnp.float32))
+    f_raw, i_raw = jnp.split(gates, 2, axis=-1)  # (B, S, H)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    i_gate = jnp.exp(jnp.minimum(i_raw, 8.0))  # capped exp input gate
+
+    if not decode:
+        S = h.shape[1]
+        qh = q.reshape(B, S, H, hd) * hd ** -0.5
+        kh = k.reshape(B, S, H, hd) * i_gate[..., None].astype(cfg.cdt)
+        vh = v.reshape(B, S, H, hd)
+        v_aug = jnp.concatenate([vh, jnp.ones((B, S, H, 1), vh.dtype)], axis=-1)
+        o, _ = chunked_gla(qh, kh, v_aug, log_f)
+        num, den = o[..., :hd], o[..., hd:]
+        o = num / jnp.maximum(jnp.abs(den), 1.0)
+        o = o.reshape(B, S, d).astype(cfg.cdt)
+        out = (o @ params["wo"].astype(cfg.cdt))
+        # position-wise up/down projection (d_ff = 0: the block carries its own)
+        u = out @ params["wup"].astype(cfg.cdt)
+        a, b = jnp.split(u, 2, axis=-1)
+        out = (jax.nn.silu(a) * b) @ params["wdown"].astype(cfg.cdt)
+        return out.astype(h.dtype), None
+
+    qh = (q[:, 0] * hd ** -0.5).reshape(B, H, hd)
+    kh = (k[:, 0].reshape(B, H, hd)) * i_gate[:, 0][..., None].astype(cfg.cdt)
+    vh = v[:, 0].reshape(B, H, hd)
+    v_aug = jnp.concatenate([vh, jnp.ones((B, H, 1), vh.dtype)], axis=-1)
+    new_state, o = gla_decode_step(state, qh, kh, v_aug, log_f[:, 0])
+    num, den = o[..., :hd], o[..., hd:]
+    o = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, 1, d).astype(cfg.cdt)
+    out = o @ params["wo"].astype(cfg.cdt)
+    u = out @ params["wup"].astype(cfg.cdt)
+    a, b = jnp.split(u, 2, axis=-1)
+    out = (jax.nn.silu(a) * b) @ params["wdown"].astype(cfg.cdt)
+    return out.astype(h.dtype), new_state
+
+
+def init_slstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "wx": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(cfg.pdt),
+        "wh": (jax.random.normal(ks[1], (d, 4 * d)) * s).astype(cfg.pdt),
+        "wo": (jax.random.normal(ks[2], (d, d)) * s).astype(cfg.pdt),
+    }
+
+
+def slstm_fwd(params, h, cfg: ArchConfig, state=None, decode=False):
+    """sLSTM: scalar-memory LSTM with recurrence — a true sequential scan."""
+    B = h.shape[0]
+    d = cfg.d_model
+    x = h.astype(jnp.float32)
+    wx = params["wx"].astype(jnp.float32)
+    wh = params["wh"].astype(jnp.float32)
+
+    def cell(carry, xt):
+        hprev, cprev = carry
+        g = xt @ wx + hprev @ wh
+        i, f, z, o = jnp.split(g, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * cprev + jax.nn.sigmoid(i) * jnp.tanh(z)
+        hn = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (hn, c), hn
+
+    if not decode:
+        S = h.shape[1]
+        h0 = jnp.zeros((B, d), jnp.float32)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        (_, _), outs = jax.lax.scan(cell, (h0, c0), jnp.moveaxis(x, 1, 0))
+        out = jnp.moveaxis(outs, 0, 1).astype(cfg.cdt)
+        return (out @ params["wo"].astype(cfg.cdt)).astype(h.dtype), None
+
+    (hn, cn), out = cell((state[0], state[1]), x[:, 0])
+    out = (out[:, None, :].astype(cfg.cdt) @ params["wo"].astype(cfg.cdt)).astype(h.dtype)
+    return out, jnp.stack([hn, cn])

@@ -1,0 +1,226 @@
+"""Decoder-only LM covering the dense / moe / vlm / ssm / hybrid families.
+
+Layers are ``lax.scan``-ed over stacked parameters so the lowered HLO is
+depth-independent — required both for the 1-core CPU dry-run compiles here
+and for real-cluster compile latency at 88-layer scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, flags, ssm
+from .config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_dense_layer(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": blocks.init_attention(k1, cfg),
+        "n1": blocks.init_norm(cfg),
+        "n2": blocks.init_norm(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = blocks.init_moe(k2, cfg)
+        if cfg.moe_dense_residual:
+            k3 = jax.random.fold_in(k2, 1)
+            p["mlp"] = blocks.init_mlp(k3, cfg, d_ff=cfg.dense_ff or cfg.d_ff)
+            p["n3"] = blocks.init_norm(cfg)
+    else:
+        p["mlp"] = blocks.init_mlp(k2, cfg)
+    return p
+
+
+def _init_hybrid_group(key, cfg: ArchConfig):
+    """zamba2: one scan group = `attn_every` mamba blocks (+ shared attn applied
+    from tied weights outside the stack)."""
+    keys = jax.random.split(key, cfg.attn_every)
+    mamba = jax.vmap(lambda k: ssm.init_mamba2(k, cfg))(keys)
+    norms = {"scale": jnp.ones((cfg.attn_every, cfg.d_model), cfg.pdt)}
+    return {"mamba": mamba, "norms": norms}
+
+
+def _init_xlstm_group(key, cfg: ArchConfig):
+    """xlstm: one scan group = (slstm_every-1) mLSTM + 1 sLSTM."""
+    n_m = cfg.slstm_every - 1
+    keys = jax.random.split(key, n_m + 1)
+    mk = jax.vmap(lambda k: ssm.init_mlstm(k, cfg))(keys[:n_m])
+    sk = ssm.init_slstm(keys[-1], cfg)
+    return {"mlstm": mk, "slstm": sk}
+
+
+def init_lm(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, 8)
+    s = cfg.d_model ** -0.5
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * s).astype(cfg.pdt),
+        "final_norm": blocks.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * s
+        ).astype(cfg.pdt)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_dense_layer(k, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        gkeys = jax.random.split(keys[2], n_groups)
+        params["groups"] = jax.vmap(lambda k: _init_hybrid_group(k, cfg))(gkeys)
+        params["shared_attn"] = blocks.init_attention(keys[3], cfg)
+        params["shared_norm"] = blocks.init_norm(cfg)
+    elif cfg.family == "ssm":
+        n_groups = cfg.n_layers // cfg.slstm_every
+        gkeys = jax.random.split(keys[2], n_groups)
+        params["groups"] = jax.vmap(lambda k: _init_xlstm_group(k, cfg))(gkeys)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "vlm":
+        params["vision_proj"] = (
+            jax.random.normal(keys[4], (cfg.vision_dim, cfg.d_model)) * cfg.vision_dim ** -0.5
+        ).astype(cfg.pdt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _dense_layer_fwd(lp, h, cfg: ArchConfig, positions):
+    a = blocks.attention_fwd(lp["attn"], blocks.apply_norm(lp["n1"], h, cfg), cfg, positions)
+    h = h + a
+    hn = blocks.apply_norm(lp["n2"], h, cfg)
+    if cfg.family == "moe":
+        delta = blocks.moe_fwd(lp["moe"], hn, cfg)
+        if cfg.moe_dense_residual:
+            delta = delta + blocks.mlp_fwd(lp["mlp"], blocks.apply_norm(lp["n3"], h, cfg), cfg)
+    else:
+        delta = blocks.mlp_fwd(lp["mlp"], hn, cfg)
+    return h + delta
+
+
+def _remat(fn, cfg: ArchConfig):
+    """Wrap a scan body with the configured rematerialization policy."""
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward_hidden(params, embeds, cfg: ArchConfig, positions=None):
+    """Stack of layers over input embeddings (B, S, d) -> final hidden."""
+    B, S, _ = embeds.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    h = embeds
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        @functools.partial(_remat, cfg=cfg)  # remat per configured policy
+        def body(h, lp):
+            return blocks.constrain_act(_dense_layer_fwd(lp, h, cfg, positions), cfg), None
+
+        h, _ = jax.lax.scan(body, h, params["layers"], unroll=flags.scan_unroll())
+    elif cfg.family == "hybrid":
+        shared_attn = params["shared_attn"]
+        shared_norm = params["shared_norm"]
+
+        @jax.checkpoint
+        def group_body(h, gp):
+            # shared attention block (tied weights), then attn_every mamba blocks
+            a = blocks.attention_fwd(
+                shared_attn, blocks.apply_norm(shared_norm, h, cfg), cfg, positions
+            )
+            h = h + a
+
+            def mamba_body(h, mp):
+                o, _, _ = ssm.mamba2_fwd(mp["m"], blocks.apply_norm(mp["n"], h, cfg), cfg)
+                return h + o, None
+
+            h, _ = jax.lax.scan(mamba_body, h, {"m": gp["mamba"], "n": gp["norms"]}, unroll=flags.scan_unroll())
+            return blocks.constrain_act(h, cfg), None
+
+        h, _ = jax.lax.scan(group_body, h, params["groups"], unroll=flags.scan_unroll())
+    elif cfg.family == "ssm":
+        @jax.checkpoint
+        def group_body(h, gp):
+            def m_body(h, mp):
+                o, _ = ssm.mlstm_fwd(mp, h, cfg)
+                return h + o, None
+
+            h, _ = jax.lax.scan(m_body, h, gp["mlstm"], unroll=flags.scan_unroll())
+            o, _ = ssm.slstm_fwd(gp["slstm"], h, cfg)
+            return h + o, None
+
+        h, _ = jax.lax.scan(group_body, h, params["groups"], unroll=flags.scan_unroll())
+    else:
+        raise ValueError(cfg.family)
+
+    return blocks.apply_norm(params["final_norm"], h, cfg)
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig):
+    return params["embed"].astype(cfg.cdt)[tokens]
+
+
+def lm_head(params, h, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h.astype(cfg.cdt) @ w.astype(cfg.cdt)
+
+
+def forward_vlm_embeds(params, tokens, patch_embs, cfg: ArchConfig):
+    """VLM: project stub CLIP patch embeddings, prepend to token embeddings."""
+    tok = embed_tokens(params, tokens, cfg)
+    img = (patch_embs.astype(cfg.cdt) @ params["vision_proj"].astype(cfg.cdt))
+    return jnp.concatenate([img, tok], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# loss: chunked (memory-efficient) cross-entropy — never materializes the
+# full (B, S, vocab) logits
+# ---------------------------------------------------------------------------
+def chunked_xent(params, h, labels, cfg: ArchConfig, chunk: int = 512):
+    B, S, d = h.shape
+    C = min(chunk, S)
+    while S % C:
+        C //= 2
+    n = S // C
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.cdt)
+
+    hc = h.reshape(B, n, C, d)
+    lc = labels.reshape(B, n, C)
+
+    @jax.checkpoint
+    def chunk_loss(hx, lx):
+        logits = (hx.astype(cfg.cdt) @ w).astype(jnp.float32)  # (B, C, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def body(acc, inp):
+        hx, lx = inp
+        return acc + chunk_loss(hx, lx), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+        unroll=flags.scan_unroll(),
+    )
+    return total / (B * S)
+
+
+def lm_loss(params, batch, cfg: ArchConfig):
+    """batch: {tokens (B,S), labels (B,S)} (+ patch_embs / frames for vlm)."""
+    if cfg.family == "vlm" and "patch_embs" in batch:
+        embeds = forward_vlm_embeds(params, batch["tokens"], batch["patch_embs"], cfg)
+        h = forward_hidden(params, embeds, cfg)
+        h = h[:, batch["patch_embs"].shape[1] :, :]  # loss over text positions
+    else:
+        embeds = embed_tokens(params, batch["tokens"], cfg)
+        h = forward_hidden(params, embeds, cfg)
+    return chunked_xent(params, h, batch["labels"], cfg)

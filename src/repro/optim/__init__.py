@@ -1,0 +1,11 @@
+"""Optimizers: AdamW, Orthant (GGR-orthogonalized momentum), compression."""
+from . import adamw, compress, orthant
+
+
+def make_optimizer(name: str):
+    """(init_fn, update_fn) by name: 'adamw' | 'orthant'."""
+    mod = {"adamw": adamw, "orthant": orthant}[name]
+    return mod.init, mod.update
+
+
+__all__ = ["adamw", "orthant", "compress", "make_optimizer"]

@@ -1,0 +1,63 @@
+"""Gradient compression for cross-pod (DCN) all-reduce: error-feedback int8.
+
+At 2 pods the gradient all-reduce crosses the data-center network; int8
+quantization with error feedback cuts those bytes 4x with no asymptotic loss
+in convergence (the residual is replayed into the next step).  The trainer
+wires this in optionally (``grad_compression="int8_ef"``); the quantize /
+dequantize pair also serves as the reference for the §Perf collective-bytes
+hillclimb on the multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict  # error-feedback residual per parameter
+
+
+def init(params) -> EFState:
+    return EFState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def quantize(x: jax.Array):
+    """Symmetric per-tensor int8; returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, state: EFState):
+    """Apply error-feedback int8 round-trip to a gradient pytree.
+
+    Returns (compressed_grads, new_state).  In production the int8 payload is
+    what crosses the DCN; here the round-trip models the information loss and
+    the residual carries the quantization error to the next step.
+    """
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize(gf)
+        gq = dequantize(q, s)
+        return gq.astype(g.dtype), gf - gq
+
+    out = jax.tree.map(one, grads, state.residual)
+    gq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return gq, EFState(residual=res)
+
+
+def compressed_bytes(params) -> int:
+    """Bytes on the wire per step with int8 payload (+4-byte scale/tensor)."""
+    leaves = jax.tree.leaves(params)
+    return sum(l.size + 4 for l in leaves)

@@ -1,0 +1,94 @@
+"""Orthant — GGR-orthogonalized momentum optimizer (Muon-class).
+
+The paper's technique on the LM-training critical path: for every >=2-D
+parameter, the momentum matrix is orthogonalized through a GGR QR
+factorization (Q = M·R⁻¹, one optional refinement — "CholeskyQR2-style" but
+with the R factor coming from the paper's fused Givens sweep, which is
+numerically stable where Gram-based R is not).  1-D parameters (norm scales,
+biases) fall back to AdamW moments.
+
+Stacked (scanned-layer) parameters orthogonalize under ``vmap`` over their
+leading stack dimensions; model-sharded matrices distribute through GSPMD (an
+explicit shard_map TSQR path lives in ``core.distributed`` and is exercised
+by examples/distributed_qr.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocked import ggr_geqrt
+
+
+class OrthantState(NamedTuple):
+    step: jax.Array
+    momentum: dict  # f32 momentum for every param
+    v: dict  # second moment, used only by the 1-D AdamW fallback
+
+
+def _orthogonalize_2d(m: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """Q = M R⁻¹ with R from GGR QR of the (transposed-to-tall) matrix."""
+    a, b = m.shape
+    mt = m.T if a < b else m  # tall
+    n = mt.shape[1]
+    mf = mt.astype(jnp.float32)
+    scale = jnp.sqrt(jnp.mean(mf * mf) + 1e-20)
+    mf = mf / scale
+    R, _ = ggr_geqrt(mf)
+    R = R[:n, :]
+    diag = jnp.abs(jnp.diagonal(R))
+    Rs = R + (eps * (jnp.max(diag) + 1e-20)) * jnp.eye(n, dtype=R.dtype)
+    q = jax.scipy.linalg.solve_triangular(Rs, mf.T, lower=False, trans=1).T
+    q = jnp.where(jnp.isfinite(q), q, 0.0)
+    return (q if a >= b else q.T).astype(m.dtype)
+
+
+def _orthogonalize(m: jax.Array) -> jax.Array:
+    if m.ndim == 2:
+        return _orthogonalize_2d(m)
+    # stacked (scan) params: vmap over every leading dim
+    fn = _orthogonalize_2d
+    for _ in range(m.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(m)
+
+
+def init(params) -> OrthantState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OrthantState(
+        step=jnp.zeros((), jnp.int32), momentum=z, v=jax.tree.map(jnp.copy, z)
+    )
+
+
+def update(
+    grads,
+    state: OrthantState,
+    params,
+    lr: float | jax.Array,
+    beta: float = 0.95,
+    weight_decay: float = 0.1,
+    fallback_b2: float = 0.95,
+    fallback_eps: float = 1e-8,
+):
+    step = state.step + 1
+
+    def upd(g, mom, v, p):
+        g = g.astype(jnp.float32)
+        mom2 = beta * mom + (1 - beta) * g
+        if p.ndim >= 2 and min(p.shape[-2:]) > 1:
+            direction = _orthogonalize(mom2)
+            # Muon-style shape-aware scale
+            scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1]))
+            delta = scale * direction + weight_decay * p.astype(jnp.float32)
+            v2 = v
+        else:
+            v2 = fallback_b2 * v + (1 - fallback_b2) * g * g
+            delta = mom2 / (jnp.sqrt(v2) + fallback_eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mom2, v2
+
+    out = jax.tree.map(upd, grads, state.momentum, state.v, params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), OrthantState(step=step, momentum=pick(1), v=pick(2))

@@ -1,0 +1,3 @@
+from .sharding import MeshRules, batch_spec, param_pspecs
+
+__all__ = ["MeshRules", "batch_spec", "param_pspecs"]

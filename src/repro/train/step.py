@@ -1,0 +1,94 @@
+"""train_step: grad-accumulation scan + remat + optimizer, GSPMD-shardable."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tmod
+from repro.models.config import ArchConfig
+from repro.optim import compress as compress_mod
+from repro.optim import make_optimizer
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        return functools.partial(encdec_mod.encdec_loss, cfg=cfg)
+    return functools.partial(tmod.lm_loss, cfg=cfg)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: str = "adamw",
+    lr: float = 3e-4,
+    accum: int = 1,
+    grad_compression: Optional[str] = None,
+    weight_decay: float = 0.1,
+):
+    """Returns (init_opt, train_step).
+
+    train_step(params, opt_state, batch[, ef_state]) -> (params, opt_state,
+    metrics[, ef_state]).  With accum > 1 the global batch is split into
+    microbatches and gradients accumulate inside a scan (activation memory /
+    accum — the standard remat+accum memory lever).
+    """
+    loss_fn = make_loss_fn(cfg)
+    opt_init, opt_update = make_optimizer(optimizer)
+
+    def split_micro(batch):
+        def rs(x):
+            B = x.shape[0]
+            assert B % accum == 0, (B, accum)
+            return x.reshape(accum, B // accum, *x.shape[1:])
+
+        return jax.tree.map(rs, batch)
+
+    def grads_of(params, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        micro = split_micro(batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), micro)
+        inv = 1.0 / accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    if grad_compression is None:
+
+        def train_step(params, opt_state, batch):
+            loss, grads = grads_of(params, batch)
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+            )
+            new_params, new_opt = opt_update(
+                grads, opt_state, params, lr=lr, weight_decay=weight_decay
+            )
+            return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+        return opt_init, train_step
+
+    assert grad_compression == "int8_ef", grad_compression
+
+    def train_step_c(params, opt_state, batch, ef_state):
+        loss, grads = grads_of(params, batch)
+        grads, ef_state = compress_mod.compress_grads(grads, ef_state)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        new_params, new_opt = opt_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}, ef_state
+
+    return opt_init, train_step_c

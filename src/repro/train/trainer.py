@@ -1,0 +1,151 @@
+"""Trainer: mesh-aware loop with checkpoint/restart and elastic resume.
+
+Fault-tolerance contract:
+  * checkpoints are atomic + step-tagged (see checkpoint/ckpt.py);
+  * ``Trainer(..., resume=True)`` picks up the latest good step;
+  * the data stream is a pure function of the step, so restarts are
+    bit-reproducible;
+  * the mesh is a constructor argument — after a node failure the launcher
+    re-forms a smaller mesh from survivors and the same checkpoint restores
+    onto it (param shardings are recomputed from the same logical rules).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt
+from repro.data import SyntheticTokens
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tmod
+from repro.models.config import ArchConfig
+from repro.parallel import MeshRules, batch_spec, param_pspecs
+from repro.train.step import make_train_step
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        mesh=None,
+        optimizer: str = "adamw",
+        lr: float = 3e-4,
+        seq_len: int = 512,
+        global_batch: int = 8,
+        accum: int = 1,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        resume: bool = True,
+        seed: int = 0,
+        grad_compression: Optional[str] = None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = MeshRules(mesh) if mesh is not None else None
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.data = SyntheticTokens(cfg.vocab, seq_len, global_batch, seed)
+        self.step_num = 0
+
+        key = jax.random.PRNGKey(seed)
+        if cfg.family == "encdec":
+            init_fn = lambda: encdec_mod.init_encdec(cfg, key)
+        else:
+            init_fn = lambda: tmod.init_lm(cfg, key)
+
+        opt_init, step_fn = make_train_step(
+            cfg, optimizer=optimizer, lr=lr, accum=accum,
+            grad_compression=grad_compression,
+        )
+
+        if self.rules is not None:
+            params_shape = jax.eval_shape(init_fn)
+            pspecs = param_pspecs(params_shape, cfg, self.rules)
+            shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+            # optimizer moments mirror the param tree (same leaf names), so the
+            # same name-based rules shard them; the scalar step lands on P()
+            opt_shape = jax.eval_shape(opt_init, params_shape)
+            opt_specs = param_pspecs(opt_shape, cfg, self.rules)
+            opt_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs)
+            with mesh:
+                self.params = jax.jit(init_fn, out_shardings=shardings)()
+                self.opt_state = jax.jit(opt_init, out_shardings=opt_shardings)(self.params)
+                self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._param_shardings = shardings
+            self._opt_shardings = opt_shardings
+        else:
+            self.params = init_fn()
+            self.opt_state = opt_init(self.params)
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._param_shardings = None
+            self._opt_shardings = None
+
+        if resume and ckpt_dir:
+            last = ckpt.latest_step(ckpt_dir)
+            if last is not None:
+                self.restore(last)
+
+    # ------------------------------------------------------------------
+    def _place_batch(self, batch):
+        if self.rules is None:
+            return batch
+        return {
+            k: jax.device_put(
+                v, NamedSharding(self.mesh, batch_spec("tokens", self.rules))
+            )
+            for k, v in batch.items()
+        }
+
+    def run(self, steps: int, log_every: int = 10, log_fn=print):
+        t0 = time.time()
+        losses = []
+        ctx = self.mesh if self.mesh is not None else _nullctx()
+        with ctx:
+            while self.step_num < steps:
+                batch = self._place_batch(self.data.batch_at(self.step_num))
+                self.params, self.opt_state, metrics = self._step(
+                    self.params, self.opt_state, batch
+                )
+                self.step_num += 1
+                losses.append(float(metrics["loss"]))
+                if self.step_num % log_every == 0:
+                    dt = time.time() - t0
+                    log_fn(
+                        f"step {self.step_num:5d} loss {losses[-1]:.4f} "
+                        f"({dt / max(1, self.step_num):.2f}s/step)"
+                    )
+                if self.ckpt_dir and self.step_num % self.ckpt_every == 0:
+                    self.save()
+        return losses
+
+    # ------------------------------------------------------------------
+    def save(self):
+        state = {"params": self.params, "opt": self.opt_state}
+        ckpt.save(
+            self.ckpt_dir,
+            self.step_num,
+            state,
+            extra={"data": self.data.state(self.step_num)},
+        )
+
+    def restore(self, step: int):
+        like = {"params": self.params, "opt": self.opt_state}
+        shardings = None
+        if self._param_shardings is not None:
+            # elastic: recompute shardings for the CURRENT mesh
+            shardings = {"params": self._param_shardings, "opt": self._opt_shardings}
+        state, extra = ckpt.restore(self.ckpt_dir, step, like, shardings)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step_num = extra["data"]["step"]
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

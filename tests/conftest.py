@@ -1,0 +1,8 @@
+"""Test-wide config: enable x64 so f64 oracle comparisons are meaningful.
+
+NOTE: does NOT set XLA_FLAGS device-count overrides — smoke tests and benches
+must see the single real CPU device (multi-device tests spawn subprocesses).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,63 @@
+"""Baseline QR routines (dgeqr2/dgeqrf/dgeqr2ht/CGR/GR/MGS) vs numpy."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    cgr_qr,
+    givens_qr,
+    householder_qr2,
+    householder_qrf,
+    mgs_qr,
+    mht_qr,
+    ggr_qr2,
+)
+
+
+def _rand(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape)
+
+
+@pytest.mark.parametrize(
+    "fn",
+    [givens_qr, cgr_qr, householder_qr2, ggr_qr2],
+    ids=["givens", "cgr", "dgeqr2", "dgeqr2ggr"],
+)
+@pytest.mark.parametrize("m,n", [(8, 8), (16, 10), (12, 12)])
+def test_unblocked_routines(fn, m, n):
+    A = _rand((m, n), seed=m * 7 + n)
+    R = np.asarray(fn(jnp.array(A)))
+    Rnp = np.linalg.qr(A, mode="r")
+    kk = min(m, n)
+    np.testing.assert_allclose(np.abs(R[:kk]), np.abs(Rnp[:kk]), atol=1e-9)
+
+
+@pytest.mark.parametrize("block", [2, 4, 8])
+def test_blocked_routines(block):
+    A = _rand((24, 16), seed=31)
+    Rnp = np.linalg.qr(A, mode="r")
+    for fn in (householder_qrf, mht_qr):
+        R = np.asarray(fn(jnp.array(A), block=block))
+        np.testing.assert_allclose(np.abs(R[:16]), np.abs(Rnp), atol=1e-9)
+
+
+def test_mgs():
+    A = _rand((16, 16), seed=37)
+    Q, R = mgs_qr(jnp.array(A))
+    Q, R = np.asarray(Q), np.asarray(R)
+    np.testing.assert_allclose(Q @ R, A, atol=1e-9)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(16), atol=1e-9)
+
+
+def test_all_routines_agree_on_abs_r():
+    """Fig. 9 sanity: every routine factors to the same |R| (up to signs)."""
+    A = _rand((12, 12), seed=41)
+    rs = []
+    for fn in (givens_qr, cgr_qr, householder_qr2, ggr_qr2):
+        rs.append(np.abs(np.asarray(fn(jnp.array(A)))))
+    for r in rs[1:]:
+        np.testing.assert_allclose(r, rs[0], atol=1e-9)

@@ -1,0 +1,95 @@
+"""Dry-run machinery: collective parser, specs, and one real (small) cell."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HLO_SAMPLE = """
+  %all-reduce.1 = f32[16,4096,2048]{2,1,0} all-reduce(%fusion.1), channel_id=1
+  %all-gather.2 = bf16[512,1024]{1,0} all-gather(%param.1), channel_id=2
+  %reduce-scatter.3 = f32[128]{0} reduce-scatter(%fusion.2), channel_id=3
+  %add.1 = f32[4]{0} add(%a, %b)
+  %collective-permute.4 = f32[2,2]{1,0} collective-permute(%x), channel_id=4
+"""
+
+
+def test_collective_parser_sums_bytes():
+    from repro.launch.dryrun import collective_bytes
+
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 4096 * 2048 * 4
+    assert out["all-gather"] == 512 * 1024 * 2
+    assert out["reduce-scatter"] == 128 * 4
+    assert out["collective-permute"] == 2 * 2 * 4
+    assert out["count"] == 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    )
+
+
+def test_sanitize_spec_drops_nondivisible(monkeypatch):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import sanitize_spec
+
+    mesh = jax.make_mesh((1,), ("model",))
+    # axis size 1 divides everything
+    assert sanitize_spec(P("model", None), (7, 3), mesh) == P("model", None)
+
+
+def test_depth_helpers_roundtrip():
+    from repro.configs import get_config
+    from repro.launch.dryrun import depth_units, with_depth
+
+    for arch in ("olmo-1b", "zamba2-1.2b", "xlstm-125m", "seamless-m4t-large-v2",
+                 "arctic-480b"):
+        cfg = get_config(arch)
+        L = depth_units(cfg)
+        assert L >= 1
+        cfg2 = with_depth(cfg, 2)
+        assert depth_units(cfg2) == 2
+        assert with_depth(cfg2, L).n_layers == cfg.n_layers
+
+
+@pytest.mark.slow
+def test_one_real_cell_subprocess(tmp_path):
+    """xlstm decode_32k: the cheapest real cell, full pipeline incl. probe."""
+    out = tmp_path / "cell.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    cell = json.loads(out.read_text())
+    assert cell["chips"] == 256
+    assert cell["roofline_seconds"]["dominant"] in ("compute", "memory", "collective")
+    assert cell["per_device"]["hlo_flops"] > 0
+    assert "roofline_seconds_corrected" in cell
+
+
+@pytest.mark.slow
+def test_multipod_mesh_shards_pod_axis(tmp_path):
+    """The 2x16x16 mesh must compile and move bytes across the pod axis."""
+    out = tmp_path / "cell2.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "train_4k", "--multi-pod", "--no-probe", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    cell = json.loads(out.read_text())
+    assert cell["chips"] == 512
+    assert cell["per_device"]["collective_bytes"] > 0

@@ -1,0 +1,107 @@
+"""Correctness of the core GGR routines against numpy.linalg.qr."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (
+    ggr_column_step,
+    ggr_qr2,
+    ggr_qr_blocked,
+    ggr_geqrt,
+    ggr_tsqrt,
+)
+
+
+def _rand(shape, seed=0, dtype=np.float64):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+@pytest.mark.parametrize("m,n", [(4, 4), (8, 5), (16, 16), (32, 7), (3, 9), (1, 4), (5, 1)])
+def test_ggr_qr2_matches_numpy(m, n):
+    A = _rand((m, n), seed=m * 100 + n)
+    R = np.asarray(ggr_qr2(jnp.array(A)))
+    Rnp = np.linalg.qr(A, mode="r")
+    kk = min(m, n)
+    np.testing.assert_allclose(np.abs(R[:kk]), np.abs(Rnp[:kk]), atol=1e-10)
+    assert np.allclose(np.tril(R, -1), 0)
+
+
+@pytest.mark.parametrize("m,n", [(6, 6), (12, 8), (20, 20)])
+def test_ggr_qr2_q_orthogonal_and_reconstructs(m, n):
+    A = _rand((m, n), seed=7)
+    R, Q = ggr_qr2(jnp.array(A), want_q=True)
+    Q, R = np.asarray(Q), np.asarray(R)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(m), atol=1e-10)
+    np.testing.assert_allclose(Q @ R, A, atol=1e-10)
+
+
+def test_column_step_matches_eq2_structure():
+    """After one GGR iteration col 0 is annihilated and the Gram is preserved."""
+    A = _rand((8, 8), seed=3)
+    out = np.asarray(ggr_column_step(jnp.array(A)))
+    assert np.abs(out[1:, 0]).max() == 0.0
+    assert out[0, 0] > 0
+    np.testing.assert_allclose(out.T @ out, A.T @ A, atol=1e-10)
+
+
+def test_column_step_r11_is_column_norm():
+    A = _rand((16, 3), seed=11)
+    out = np.asarray(ggr_column_step(jnp.array(A)))
+    np.testing.assert_allclose(out[0, 0], np.linalg.norm(A[:, 0]), atol=1e-12)
+
+
+@pytest.mark.parametrize("case", ["zero_col", "zero_tail", "zero_matrix", "one_nonzero"])
+def test_degenerate_columns_safe(case):
+    A = _rand((8, 6), seed=13)
+    if case == "zero_col":
+        A[:, 0] = 0
+    elif case == "zero_tail":
+        A[1:, 0] = 0
+    elif case == "zero_matrix":
+        A[:] = 0
+    elif case == "one_nonzero":
+        A[:, 0] = 0
+        A[5, 0] = 2.5
+    R, Q = ggr_qr2(jnp.array(A), want_q=True)
+    R, Q = np.asarray(R), np.asarray(Q)
+    assert np.isfinite(R).all() and np.isfinite(Q).all()
+    np.testing.assert_allclose(Q @ R, A, atol=1e-10)
+    np.testing.assert_allclose(Q.T @ Q, np.eye(8), atol=1e-10)
+
+
+def test_geqrt_explicit_q():
+    A = _rand((12, 12), seed=17)
+    R, Qt = ggr_geqrt(jnp.array(A))
+    np.testing.assert_allclose(np.asarray(Qt) @ A, np.asarray(R), atol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(Qt) @ np.asarray(Qt).T, np.eye(12), atol=1e-10
+    )
+
+
+def test_tsqrt_stacked():
+    rng = np.random.default_rng(19)
+    R_top = np.triu(rng.standard_normal((6, 6)))
+    B = rng.standard_normal((10, 6))
+    R_new, Qt = ggr_tsqrt(jnp.array(R_top), jnp.array(B))
+    stacked = np.concatenate([R_top, B], axis=0)
+    Rnp = np.linalg.qr(stacked, mode="r")
+    np.testing.assert_allclose(np.abs(np.asarray(R_new)), np.abs(Rnp), atol=1e-10)
+
+
+@pytest.mark.parametrize("tile", [4, 8])
+def test_blocked_qr(tile):
+    A = _rand((32, 32), seed=23)
+    R = np.asarray(ggr_qr_blocked(jnp.array(A), tile=tile))
+    Rnp = np.linalg.qr(A, mode="r")
+    np.testing.assert_allclose(np.abs(R), np.abs(Rnp), atol=1e-9)
+
+
+def test_f32_precision_reasonable():
+    A = _rand((64, 64), seed=29, dtype=np.float32)
+    R = np.asarray(ggr_qr2(jnp.array(A)))
+    Rnp = np.linalg.qr(A.astype(np.float64), mode="r")
+    np.testing.assert_allclose(np.abs(R), np.abs(Rnp), atol=5e-4)

@@ -1,0 +1,124 @@
+"""Training-stack tests: optimizer semantics, compression, checkpoint, data."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.optim import adamw, compress, orthant
+from repro.train import Trainer
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state = adamw.update(g, state, params, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_orthant_orthogonalizes_momentum():
+    m = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    q = orthant._orthogonalize_2d(m)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(8), atol=1e-4)
+
+
+def test_orthant_stacked_params_vmap():
+    m = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 8))
+    q = orthant._orthogonalize(m)
+    for i in range(3):
+        np.testing.assert_allclose(np.asarray(q[i].T @ q[i]), np.eye(8), atol=1e-4)
+
+
+def test_orthant_trains_tiny_lm():
+    cfg = get_config("olmo-1b", smoke=True)
+    tr = Trainer(cfg, optimizer="orthant", seq_len=32, global_batch=4, lr=3e-3)
+    losses = tr.run(12, log_every=100, log_fn=lambda *_: None)
+    assert losses[-1] < losses[0], losses  # technique works on the real path
+
+
+def test_int8_error_feedback_unbiased_over_steps():
+    """With error feedback, the accumulated compressed signal tracks the true
+    accumulated gradient (residual stays bounded)."""
+    g = {"w": jnp.full((64,), 0.013)}
+    state = compress.init(g)
+    total = jnp.zeros((64,))
+    for _ in range(50):
+        gq, state = compress.compress_grads(g, state)
+        total = total + gq["w"]
+    np.testing.assert_allclose(np.asarray(total), 50 * 0.013, rtol=0.02)
+
+
+def test_compression_roundtrip_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    q, s = compress.quantize(x)
+    err = jnp.abs(compress.dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.51 + 1e-7
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_config("olmo-1b", smoke=True)
+    from repro.models import transformer as tmod
+    from repro.train.step import make_train_step
+
+    params = tmod.init_lm(cfg, jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+
+    outs = {}
+    for accum in (1, 2):
+        opt_init, step = make_train_step(cfg, optimizer="adamw", lr=1e-3, accum=accum)
+        p2, _, m = jax.jit(step)(params, opt_init(params), batch)
+        outs[accum] = (m["loss"], p2)
+    np.testing.assert_allclose(float(outs[1][0]), float(outs[2][0]), rtol=1e-5)
+    # Adam's normalized update amplifies bf16 rounding noise where g ~ 0, so
+    # compare at the scale of one update (lr = 1e-3), not at fp tolerance.
+    for a, b in zip(jax.tree.leaves(outs[1][1]), jax.tree.leaves(outs[2][1])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2.5e-3
+        )
+
+
+def test_checkpoint_roundtrip_and_resume():
+    cfg = get_config("olmo-1b", smoke=True)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(cfg, seq_len=32, global_batch=2, ckpt_dir=d, ckpt_every=4, lr=1e-3)
+        tr.run(8, log_fn=lambda *_: None)
+        p_before = jax.tree.map(np.asarray, tr.params)
+
+        tr2 = Trainer(cfg, seq_len=32, global_batch=2, ckpt_dir=d, resume=True)
+        assert tr2.step_num == 8
+        for a, b in zip(jax.tree.leaves(p_before), jax.tree.leaves(tr2.params)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_checkpoint_atomicity_partial_write(tmp_path):
+    """A leftover tmp dir (simulated crash) must not shadow the good step."""
+    from repro import checkpoint as ckpt
+
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 3, tree)
+    os.makedirs(tmp_path / "tmp.7")  # crashed partial write
+    (tmp_path / "tmp.7" / "junk").write_text("x")
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    restored, _ = ckpt.restore(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(4.0))
+
+
+def test_data_pipeline_deterministic_and_restartable():
+    d1 = SyntheticTokens(512, 16, 2, seed=9)
+    d2 = SyntheticTokens(512, 16, 2, seed=9)
+    b1 = d1.batch_at(41)
+    b2 = d2.batch_at(41)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert (np.asarray(b1["tokens"]) >= 0).all()
+    assert (np.asarray(b1["tokens"]) < 512).all()
+    # labels are the next-token shift of the same stream
+    b3 = d1.batch_at(42)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
