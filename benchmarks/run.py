@@ -9,6 +9,10 @@ Paper artifact map:
   bench_pe_analogue  -> fig. 13b (fused-kernel roofline fraction vs dgemm)
   bench_kernels      -> fig. 12 (RDP macro-op kernels: panel / DET2 apply)
   bench_scaling      -> fig. 16 (parallel GGR scaling over mesh sizes)
+  bench_update       -> streaming-solver case: batched row-append update
+                        throughput vs per-matrix re-factorization
+
+Run all benches with no args, or name a subset: ``python run.py bench_update``.
 """
 from __future__ import annotations
 
@@ -199,12 +203,61 @@ print(f"RES,{{t:.0f}},{{c.get('flops',0):.3e}},{{cb}}")
     return rows
 
 
-BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels, bench_scaling]
+def bench_update():
+    """Streaming update: batched Pallas row-append (one fused launch for the
+    whole request batch) vs per-matrix re-factorization from scratch — the
+    dispatch a solver service would otherwise issue per request.
+
+    Shape (64->96, 32): each request holds R (32x32) from a 64x32 history and
+    appends 32 rows; re-factorization redoes the full 96x32 GGR QR.
+    """
+    from repro.core import ggr_qr2
+    from repro.solvers import qr_append_rows_batched
+
+    rows = []
+    rng = np.random.default_rng(2)
+    m0, p, n = 64, 32, 32
+    for B in (16, 64, 128):
+        A = jnp.asarray(rng.standard_normal((B, m0, n)), jnp.float32)
+        U = jnp.asarray(rng.standard_normal((B, p, n)), jnp.float32)
+        R = jax.jit(jax.vmap(lambda a: ggr_qr2(a)[:n]))(A)
+        full = jnp.concatenate([A, U], axis=1)  # (B, m0+p, n) — the redo input
+
+        t_upd, _ = _time(
+            lambda R, U: qr_append_rows_batched(R, U, backend="pallas",
+                                                interpret=True),
+            R, U, reps=5, warmup=2,
+        )
+
+        refactor_one = jax.jit(lambda a: ggr_qr2(a)[:n])
+        _ = jax.block_until_ready(refactor_one(full[0]))  # compile once
+
+        def refactor_loop(full):
+            outs = [refactor_one(full[i]) for i in range(full.shape[0])]
+            return outs[-1]
+
+        t_ref, _ = _time(refactor_loop, full, reps=5, warmup=2)
+        rows.append(
+            f"update_append_B{B}_m{m0}to{m0 + p}_n{n},{t_upd:.0f},"
+            f"refactor_us={t_ref:.0f};speedup={t_ref / t_upd:.1f}x;"
+            f"per_req_us={t_upd / B:.1f}"
+        )
+    return rows
+
+
+BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels,
+           bench_scaling, bench_update]
 
 
 def main() -> None:
+    wanted = sys.argv[1:]
+    by_name = {b.__name__: b for b in BENCHES}
+    unknown = [w for w in wanted if w not in by_name]
+    if unknown:
+        sys.exit(f"unknown bench(es) {unknown}; choose from {sorted(by_name)}")
+    benches = [by_name[w] for w in wanted] if wanted else BENCHES
     print("name,us_per_call,derived")
-    for bench in BENCHES:
+    for bench in benches:
         try:
             for row in bench():
                 print(row, flush=True)

@@ -22,6 +22,7 @@ from .ggr import (
     ggr_column_step_at,
     ggr_factor_column,
     ggr_qr2,
+    ggr_triangularize,
     suffix_norms,
 )
 
@@ -41,6 +42,7 @@ __all__ = [
     "ggr_geqrt",
     "ggr_qr2",
     "ggr_qr_blocked",
+    "ggr_triangularize",
     "ggr_tsqrt",
     "givens_qr",
     "gr_mults",

@@ -28,6 +28,7 @@ __all__ = [
     "ggr_column_step_at",
     "ggr_qr2",
     "ggr_factor_column",
+    "ggr_triangularize",
     "apply_ggr_factors",
     "suffix_norms",
 ]
@@ -175,6 +176,24 @@ def ggr_factor_column(X: jax.Array, c: jax.Array | int, pivot=None) -> GGRFactor
 def apply_ggr_factors(factors: GGRFactors, X: jax.Array, pivot: jax.Array | int) -> jax.Array:
     """Replay a stored column transform on new columns X (the trailing update)."""
     return _ggr_update(X, factors.v, factors.t, pivot)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pivots",))
+def ggr_triangularize(X: jax.Array, n_pivots: int) -> jax.Array:
+    """GGR sweeps annihilating columns 0..n_pivots-1 below their diagonals.
+
+    Unlike ``ggr_qr2`` this leaves trailing columns (>= n_pivots) as whatever
+    the accumulated orthogonal transform maps them to — the primitive behind
+    augmented-system least squares ([A | b] -> [R | Q^T b]) and row-append
+    updating ([R | d; U | Y] -> [R' | d'; 0 | *]).
+    """
+    m = X.shape[0]
+    steps = min(m - 1, n_pivots) if m > 1 else 0
+
+    def body(c, R):
+        return ggr_column_step_at(R, c)
+
+    return jax.lax.fori_loop(0, steps, body, X)
 
 
 @functools.partial(jax.jit, static_argnames=("want_q",))

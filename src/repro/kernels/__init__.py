@@ -4,9 +4,25 @@ kernels:
   ggr_panel  — fused GEQRT panel factorization (VMEM-resident, merged
                UPDATE_ROW1/UPDATE schedule — the paper's RDP co-design)
   ggr_apply  — fused DET2-grid trailing update with b-fold VMEM reuse
+  ggr_update — batched row-append/augmented update sweeps (grid over batch;
+               the streaming-solver hot loop)
   ops        — jit'd public wrappers incl. the full-QR Pallas driver
   ref        — pure-jnp oracles
 """
-from .ops import apply_panel, default_interpret, ggr_qr_pallas, panel_qr, tsqrt
+from .ops import (
+    apply_panel,
+    batched_update,
+    default_interpret,
+    ggr_qr_pallas,
+    panel_qr,
+    tsqrt,
+)
 
-__all__ = ["apply_panel", "default_interpret", "ggr_qr_pallas", "panel_qr", "tsqrt"]
+__all__ = [
+    "apply_panel",
+    "batched_update",
+    "default_interpret",
+    "ggr_qr_pallas",
+    "panel_qr",
+    "tsqrt",
+]

@@ -28,14 +28,18 @@ __all__ = ["panel_factor_pallas"]
 _EPS = 1e-30
 
 
-def _revcumsum(x: jax.Array) -> jax.Array:
-    """Reverse cumsum along axis 0 via doubling (log2 m shift-adds)."""
-    m = x.shape[0]
+def _revcumsum(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Reverse cumsum along ``axis`` via doubling (log2 m shift-adds)."""
+    m = x.shape[axis]
     d = 1
     while d < m:
         # x[i] += x[i + d]  (zero beyond the end)
+        tail = [slice(None)] * x.ndim
+        tail[axis] = slice(d, None)
+        pad_shape = list(x.shape)
+        pad_shape[axis] = d
         shifted = jnp.concatenate(
-            [x[d:], jnp.zeros((d,) + x.shape[1:], x.dtype)], axis=0
+            [x[tuple(tail)], jnp.zeros(pad_shape, x.dtype)], axis=axis
         )
         x = x + shifted
         d *= 2

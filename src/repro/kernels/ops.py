@@ -14,11 +14,13 @@ import jax.numpy as jnp
 
 from .ggr_apply import apply_factors_pallas
 from .ggr_panel import panel_factor_pallas
+from .ggr_update import batched_update_pallas
 
 __all__ = [
     "default_interpret",
     "panel_qr",
     "apply_panel",
+    "batched_update",
     "tsqrt",
     "ggr_qr_pallas",
 ]
@@ -41,6 +43,14 @@ def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256, interpret: bool | 
     """Replay a factored panel's b transforms over trailing columns C."""
     itp = default_interpret() if interpret is None else interpret
     return apply_factors_pallas(V, T, C, pivot0=pivot0, block_w=block_w, interpret=itp)
+
+
+def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
+                   interpret: bool | None = None):
+    """Batched row-append sweep: triangularize n_pivots columns per problem."""
+    itp = default_interpret() if interpret is None else interpret
+    return batched_update_pallas(stacked, n_pivots=n_pivots, block_b=block_b,
+                                 interpret=itp)
 
 
 def tsqrt(R_top: jax.Array, B: jax.Array, interpret: bool | None = None):

@@ -1,0 +1,158 @@
+"""Least-squares solvers on top of GGR QR: one-shot and streaming.
+
+* ``solve_triangular`` — scan-based substitution (all four lower/upper ×
+  trans variants reduce to one forward-substitution core via flips).
+* ``ggr_lstsq`` — one-shot min ||Ax - b||: GGR sweep over the augmented
+  ``[A | b]`` (so Q is never formed — the rhs rides along through the DET2
+  grids), then a triangular solve.
+* ``RecursiveLS`` — the streaming state machine: ``observe`` (row append,
+  optionally with exponential forgetting), ``forget`` (sliding-window
+  downdate) and ``solve``, all O(n^2) per event and jit/scan-friendly.
+  State is the compact ``(R, d)`` pair — never the Gram matrix, never Q.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ggr import ggr_triangularize
+
+from .qr_update import _tri_solve_lower, qr_append_rows, qr_downdate_row
+
+__all__ = ["LstsqResult", "RLSState", "RecursiveLS", "ggr_lstsq", "solve_triangular"]
+
+
+def solve_triangular(R: jax.Array, b: jax.Array, *, lower: bool = False,
+                     trans: bool = False) -> jax.Array:
+    """Solve R x = b (or R^T x = b) for triangular R; b is (n,) or (n, k).
+
+    Upper-triangular systems are solved by the anti-diagonal flip
+    ``flip(L_solve(flip(R), flip(b)))`` so a single forward-substitution
+    scan serves every variant.
+    """
+    vec = b.ndim == 1
+    B = b[:, None] if vec else b
+    A = R.T if trans else R
+    eff_lower = lower != trans  # transposing swaps triangle orientation
+    if eff_lower:
+        X = _tri_solve_lower(A, B)
+    else:
+        X = _tri_solve_lower(A[::-1, ::-1], B[::-1])[::-1]
+    return X[:, 0] if vec else X
+
+
+class LstsqResult(NamedTuple):
+    x: jax.Array       # (n, k) solution
+    resid: jax.Array   # (k,) residual 2-norms ||A x - b||
+    R: jax.Array       # (n, n) triangular factor
+    d: jax.Array       # (n, k) Q^T b (top rows)
+
+
+def ggr_lstsq(A: jax.Array, b: jax.Array) -> LstsqResult:
+    """min ||Ax - b|| for full-column-rank A (m >= n) via augmented GGR.
+
+    One sweep triangularizes ``[A | b]`` to ``[R | d; 0 | r]``; x solves
+    R x = d and ||r|| is the residual norm — b never needs a separate
+    Q^T multiply, it is just extra trailing columns in the DET2 grids.
+    """
+    m, n = A.shape
+    if m < n:
+        raise ValueError(f"ggr_lstsq requires m >= n, got {A.shape}")
+    vec = b.ndim == 1
+    B = b[:, None] if vec else b
+    X = ggr_triangularize(jnp.concatenate([A, B], axis=1), n)
+    R = jnp.triu(X[:n, :n])
+    d = X[:n, n:]
+    x = solve_triangular(R, d)
+    resid = jnp.sqrt(jnp.sum(X[n:, n:] ** 2, axis=0))
+    if vec:
+        return LstsqResult(x=x[:, 0], resid=resid[0], R=R, d=d[:, 0])
+    return LstsqResult(x=x, resid=resid, R=R, d=d)
+
+
+class RLSState(NamedTuple):
+    """Compact streaming least-squares state.
+
+    Invariants over the (weighted) observation stream:
+        R^T R = delta·I + sum_i w_i u_i u_i^T      (upper-tri, diag >= 0)
+        R^T d = sum_i w_i u_i y_i
+    """
+
+    R: jax.Array  # (n, n)
+    d: jax.Array  # (n, k)
+    count: jax.Array  # scalar int32 — observations currently in the window
+
+
+class RecursiveLS:
+    """Streaming recursive least squares via QR up/downdating.
+
+    Functional-JAX style: the instance holds static config (feature dim n,
+    rhs width k, forgetting factor lam, ridge seed delta); every method is a
+    pure ``state -> state`` map, safe under jit/scan/vmap.
+
+        rls = RecursiveLS(n=8)
+        state = rls.init()
+        state = rls.observe(state, u, y)        # new observation row
+        state = rls.forget(state, u_old, y_old) # slide the window
+        x = rls.solve(state)
+
+    ``lam < 1`` applies exponential forgetting at each observe (the
+    sqrt(lam)-scaling of (R, d) keeps the Gram invariant G <- lam·G + u u^T).
+    """
+
+    def __init__(self, n: int, k: int = 1, lam: float = 1.0, delta: float = 1e-8):
+        if not 0.0 < lam <= 1.0:
+            raise ValueError("forgetting factor lam must be in (0, 1]")
+        self.n = n
+        self.k = k
+        self.lam = lam
+        self.delta = delta
+
+    def init(self, dtype=jnp.float32) -> RLSState:
+        """Fresh state: R = sqrt(delta)·I (ridge seed keeps R invertible)."""
+        R0 = jnp.sqrt(jnp.asarray(self.delta, dtype)) * jnp.eye(self.n, dtype=dtype)
+        return RLSState(R=R0, d=jnp.zeros((self.n, self.k), dtype),
+                        count=jnp.zeros((), jnp.int32))
+
+    def _as_rows(self, u, y):
+        U = u[None, :] if u.ndim == 1 else u
+        Y = jnp.asarray(y, U.dtype).reshape(U.shape[0], self.k)
+        return U, Y
+
+    def observe(self, state: RLSState, u: jax.Array, y: jax.Array) -> RLSState:
+        """Fold in observation row(s): u (n,) or (p, n), y (k,)/(p, k)."""
+        U, Y = self._as_rows(u, y)
+        g = jnp.asarray(self.lam, state.R.dtype) ** (0.5 * U.shape[0])
+        R, d = qr_append_rows(g * state.R, U, g * state.d, Y)
+        return RLSState(R=R, d=d, count=state.count + U.shape[0])
+
+    def forget(self, state: RLSState, u: jax.Array, y: jax.Array) -> RLSState:
+        """Remove a previously-observed row (sliding-window downdate).
+
+        Only meaningful with lam == 1.0 (with exponential forgetting the old
+        row's weight has decayed, so the unscaled downdate would overshoot).
+        """
+        y_row = jnp.asarray(y, state.R.dtype).reshape(self.k)
+        R, d = qr_downdate_row(state.R, u, state.d, y_row)
+        return RLSState(R=R, d=d, count=state.count - 1)
+
+    def solve(self, state: RLSState) -> jax.Array:
+        """Current weights x = R^{-1} d, shape (n, k) (or (n,) when k == 1)."""
+        x = solve_triangular(state.R, state.d)
+        return x[:, 0] if self.k == 1 else x
+
+    def predict(self, state: RLSState, u: jax.Array) -> jax.Array:
+        """y_hat = u @ x for a feature row or batch of rows."""
+        x = solve_triangular(state.R, state.d)
+        out = u @ x
+        return out[..., 0] if self.k == 1 else out
+
+    def residual_gram(self, state: RLSState, u: jax.Array) -> jax.Array:
+        """||R^{-T} u||^2 — the leverage of u under the current window
+        (used by the downdate: 1 - leverage must stay positive)."""
+        q = _tri_solve_lower(state.R.T.astype(jnp.promote_types(state.R.dtype,
+                                                                jnp.float32)),
+                             u[:, None])[:, 0]
+        return q @ q

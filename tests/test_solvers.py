@@ -1,0 +1,289 @@
+"""repro.solvers: up/downdating + lstsq vs f64 re-factorization oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ggr_qr2, ggr_triangularize
+from repro.solvers import (
+    RecursiveLS,
+    ggr_lstsq,
+    qr_append_rows,
+    qr_append_rows_batched,
+    qr_downdate_row,
+    qr_rank1_update,
+    solve_triangular,
+)
+
+
+def _rand(shape, seed, dtype=np.float64):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+def _state64(A, b):
+    """f64 oracle (R, d) with the GGR sign convention (non-negative diag)."""
+    fit = ggr_lstsq(jnp.asarray(A, jnp.float64), jnp.asarray(b, jnp.float64))
+    return fit.R, fit.d
+
+
+# ---------------------------------------------------------------- triangular
+
+@pytest.mark.parametrize("lower", [False, True])
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("k", [0, 3])
+def test_solve_triangular_all_variants(lower, trans, k):
+    n = 9
+    M = np.triu(_rand((n, n), 0)) + 3.0 * np.eye(n)
+    if lower:
+        M = M.T
+    b = _rand((n, k) if k else (n,), 1)
+    x = solve_triangular(jnp.asarray(M), jnp.asarray(b), lower=lower, trans=trans)
+    assert x.shape == b.shape
+    xo = np.linalg.solve(M.T if trans else M, b)
+    np.testing.assert_allclose(np.asarray(x), xo, rtol=1e-10, atol=1e-12)
+
+
+# --------------------------------------------------------------------- lstsq
+
+@pytest.mark.parametrize("m,n,k", [(24, 6, 1), (40, 12, 3), (16, 16, 2)])
+def test_ggr_lstsq_matches_numpy(m, n, k):
+    A, b = _rand((m, n), 2), _rand((m, k), 3)
+    fit = ggr_lstsq(jnp.asarray(A), jnp.asarray(b))
+    xo = np.linalg.lstsq(A, b, rcond=None)[0]
+    np.testing.assert_allclose(np.asarray(fit.x), xo, rtol=1e-8, atol=1e-10)
+    ro = np.linalg.norm(A @ xo - b, axis=0)
+    np.testing.assert_allclose(np.asarray(fit.resid), ro, rtol=1e-8, atol=1e-10)
+
+
+def test_ggr_lstsq_vector_rhs_shape():
+    A, b = _rand((20, 5), 4), _rand((20,), 5)
+    fit = ggr_lstsq(jnp.asarray(A), jnp.asarray(b))
+    assert fit.x.shape == (5,) and fit.d.shape == (5,)
+    np.testing.assert_allclose(
+        np.asarray(fit.x), np.linalg.lstsq(A, b, rcond=None)[0], rtol=1e-8
+    )
+
+
+# -------------------------------------------------------------------- append
+
+@pytest.mark.parametrize("m,n,p", [(24, 8, 1), (24, 8, 6), (48, 16, 16)])
+def test_append_matches_f64_refactorization(m, n, p):
+    """f32 append on an f32 state vs f64 re-factorization from scratch."""
+    A, b = _rand((m, n), 6), _rand((m, 1), 7)
+    U, Y = _rand((p, n), 8), _rand((p, 1), 9)
+    fit32 = ggr_lstsq(jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32))
+    R2, d2 = qr_append_rows(
+        fit32.R, jnp.asarray(U, jnp.float32), fit32.d, jnp.asarray(Y, jnp.float32)
+    )
+    assert R2.dtype == jnp.float32
+    Ro, do = _state64(np.concatenate([A, U]), np.concatenate([b, Y]))
+    np.testing.assert_allclose(np.asarray(R2), np.asarray(Ro), rtol=1e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(do), rtol=1e-5, atol=5e-5)
+
+
+def test_append_without_rhs():
+    A, U = _rand((20, 6), 10), _rand((4, 6), 11)
+    R = ggr_qr2(jnp.asarray(A))[:6]
+    R2 = qr_append_rows(R, jnp.asarray(U))
+    Ro = ggr_qr2(jnp.asarray(np.concatenate([A, U])))[:6]
+    np.testing.assert_allclose(np.asarray(R2), np.asarray(Ro), rtol=1e-9, atol=1e-10)
+
+
+# ------------------------------------------------------------------ downdate
+
+def test_downdate_inverts_append_f32():
+    n = 10
+    A, b = _rand((30, n), 12), _rand((30, 1), 13)
+    fit = ggr_lstsq(jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32))
+    u = jnp.asarray(_rand((n,), 14), jnp.float32)
+    y = jnp.asarray(_rand((1,), 15), jnp.float32)
+    R2, d2 = qr_append_rows(fit.R, u[None, :], fit.d, y[None, :])
+    R3, d3 = qr_downdate_row(R2, u, d2, y)
+    np.testing.assert_allclose(np.asarray(R3), np.asarray(fit.R), rtol=1e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(d3), np.asarray(fit.d), rtol=1e-5, atol=5e-5)
+
+
+def test_downdate_matches_f64_refactorization():
+    """Remove an interior row; compare against factoring the remaining rows."""
+    m, n = 25, 7
+    A, b = _rand((m, n), 16), _rand((m, 1), 17)
+    R, d = _state64(A, b)
+    R2, d2 = qr_downdate_row(R, jnp.asarray(A[5]), d, jnp.asarray(b[5]))
+    keep = np.arange(m) != 5
+    Ro, do = _state64(A[keep], b[keep])
+    np.testing.assert_allclose(np.asarray(R2), np.asarray(Ro), rtol=1e-9, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(do), rtol=1e-9, atol=1e-10)
+
+
+def test_rank1_update_both_signs():
+    n = 6
+    A = _rand((18, n), 18)
+    R = ggr_qr2(jnp.asarray(A))[:n]
+    v = jnp.asarray(_rand((n,), 19))
+    up = qr_rank1_update(R, v, 2.0)
+    up_ref = qr_append_rows(R, (jnp.sqrt(2.0) * v)[None, :])
+    np.testing.assert_allclose(np.asarray(up), np.asarray(up_ref), rtol=1e-12)
+    back = qr_rank1_update(up, v, -2.0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(R), rtol=1e-8, atol=1e-9)
+
+
+# ----------------------------------------------------------------- recursive
+
+def test_rls_sliding_window_matches_lstsq():
+    """f32 streaming state over a 40-step stream vs f64 window lstsq."""
+    n, T, W = 6, 40, 14
+    X = _rand((T, n), 20)
+    theta = _rand((n,), 21)
+    y = X @ theta + 0.1 * _rand((T,), 22)
+    rls = RecursiveLS(n=n)
+    st = rls.init(jnp.float32)
+    for t in range(T):
+        st = rls.observe(st, jnp.asarray(X[t], jnp.float32),
+                         jnp.asarray(y[t : t + 1], jnp.float32))
+        if t >= W:
+            st = rls.forget(st, jnp.asarray(X[t - W], jnp.float32),
+                            jnp.asarray(y[t - W : t - W + 1], jnp.float32))
+    assert int(st.count) == W
+    xo = np.linalg.lstsq(X[T - W :], y[T - W :], rcond=None)[0]
+    np.testing.assert_allclose(np.asarray(rls.solve(st)), xo, rtol=1e-5, atol=1e-4)
+
+
+def test_rls_block_observe_and_forgetting():
+    n = 5
+    rls = RecursiveLS(n=n, lam=0.9)
+    st = rls.init(jnp.float64)
+    X, y = _rand((12, n), 23), _rand((12, 1), 24)
+    st = rls.observe(st, jnp.asarray(X), jnp.asarray(y))  # block of 12 rows
+    # oracle: exponentially weighted lstsq (weight lam^(rows below) per row —
+    # a block observe decays all-or-nothing, weights within the block equal)
+    x = np.asarray(rls.solve(st))
+    xo = np.linalg.lstsq(X, y[:, 0], rcond=None)[0]
+    np.testing.assert_allclose(x, xo, rtol=1e-6, atol=1e-8)
+    assert int(st.count) == 12
+
+
+# -------------------------------------------------------------------- pallas
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-5), (jnp.float64, 1e-11)])
+def test_batched_pallas_matches_vmapped_reference(dtype, tol):
+    B, n, p, k = 5, 8, 6, 2
+    rng = np.random.default_rng(25)
+    Rb = jnp.asarray(np.triu(rng.standard_normal((B, n, n))), dtype)
+    Ub = jnp.asarray(rng.standard_normal((B, p, n)), dtype)
+    db = jnp.asarray(rng.standard_normal((B, n, k)), dtype)
+    Yb = jnp.asarray(rng.standard_normal((B, p, k)), dtype)
+    Rp, dp = qr_append_rows_batched(Rb, Ub, db, Yb, backend="pallas", interpret=True)
+    Rr, dr = qr_append_rows_batched(Rb, Ub, db, Yb, backend="reference")
+    np.testing.assert_allclose(np.asarray(Rp), np.asarray(Rr), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=tol, atol=tol)
+
+
+def test_batched_pallas_no_rhs():
+    B, n, p = 3, 6, 4
+    rng = np.random.default_rng(26)
+    Rb = jnp.asarray(np.triu(rng.standard_normal((B, n, n))), jnp.float32)
+    Ub = jnp.asarray(rng.standard_normal((B, p, n)), jnp.float32)
+    Rp = qr_append_rows_batched(Rb, Ub, backend="pallas", interpret=True)
+    Rr = qr_append_rows_batched(Rb, Ub, backend="reference")
+    np.testing.assert_allclose(np.asarray(Rp), np.asarray(Rr), rtol=5e-5, atol=5e-5)
+
+
+def test_triangularize_augmented_shape_protocol():
+    """ggr_triangularize leaves trailing columns un-pivoted (the lstsq core)."""
+    m, n, k = 15, 4, 2
+    X = jnp.asarray(_rand((m, n + k), 27))
+    out = ggr_triangularize(X, n)
+    below = np.asarray(out)[n:, :n]
+    np.testing.assert_allclose(below, 0.0, atol=1e-12)
+
+
+# ------------------------------------------------------------------- serving
+
+def test_qr_server_round_trip():
+    from repro.launch.serve_qr import QRServer, make_workload
+
+    reqs = make_workload(10, n=6, rows=3, k=1, seed=28)
+    server = QRServer(backend="pallas", max_batch=4, interpret=True)
+    tickets = []
+    for r in reqs:
+        if r[0] == "lstsq":
+            tickets.append(server.submit_lstsq(r[1], r[2]))
+        else:
+            tickets.append(server.submit_append(*r[1:]))
+    assert server.pending() == len(reqs)
+    assert server.flush() == len(reqs)
+    assert server.pending() == 0
+
+    for tk, r in zip(tickets, reqs):
+        if r[0] == "lstsq":
+            x, resid = server.result(tk)
+            xo = np.linalg.lstsq(r[1], r[2], rcond=None)[0]
+            np.testing.assert_allclose(np.asarray(x), xo, rtol=1e-3, atol=1e-4)
+        else:
+            Rn, dn = server.result(tk)
+            Ro, do = qr_append_rows(*(jnp.asarray(a) for a in r[1:]))
+            np.testing.assert_allclose(np.asarray(Rn), np.asarray(Ro),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(dn), np.asarray(do),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_qr_server_ticket_lifecycle():
+    """Tickets are single-flush-cycle: early reads and stale reads both raise."""
+    from repro.launch.serve_qr import QRServer
+
+    rng = np.random.default_rng(31)
+    A1 = rng.standard_normal((12, 3)).astype(np.float32)
+    A2 = rng.standard_normal((12, 3)).astype(np.float32)  # same shape => same group
+    b = rng.standard_normal((12, 1)).astype(np.float32)
+    server = QRServer(backend="reference")
+
+    t1 = server.submit_lstsq(A1, b)
+    with pytest.raises(KeyError, match="not yet flushed"):
+        server.result(t1)
+    server.flush()
+    x1 = np.asarray(server.result(t1)[0])
+
+    t2 = server.submit_lstsq(A2, b)
+    with pytest.raises(KeyError, match="not yet flushed"):
+        server.result(t2)  # must NOT silently return t1's result
+    server.flush()
+    x2 = np.asarray(server.result(t2)[0])
+    with pytest.raises(KeyError, match="expired"):
+        server.result(t1)
+
+    np.testing.assert_allclose(x1, np.linalg.lstsq(A1, b, rcond=None)[0],
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(x2, np.linalg.lstsq(A2, b, rcond=None)[0],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_rls_scan_jit_compatible():
+    """The whole observe/forget step runs under jit + lax.scan."""
+    n, W = 4, 6
+    rls = RecursiveLS(n=n)
+    X = jnp.asarray(_rand((20, n), 29), jnp.float32)
+    y = jnp.asarray(_rand((20, 1), 30), jnp.float32)
+
+    @jax.jit
+    def run(X, y):
+        st = rls.init(jnp.float32)
+
+        def step(st, t):
+            st = rls.observe(st, X[t], y[t])
+            st = jax.lax.cond(
+                t >= W,
+                lambda s: rls.forget(s, X[t - W], y[t - W]),
+                lambda s: s,
+                st,
+            )
+            return st, st.count
+
+        st, counts = jax.lax.scan(step, st, jnp.arange(20))
+        return rls.solve(st), counts
+
+    x, counts = run(X, y)
+    assert int(counts[-1]) == W
+    xo = np.linalg.lstsq(np.asarray(X)[-W:], np.asarray(y)[-W:, 0], rcond=None)[0]
+    np.testing.assert_allclose(np.asarray(x), xo, rtol=1e-4, atol=1e-4)
