@@ -11,6 +11,8 @@ Paper artifact map:
   bench_scaling      -> fig. 16 (parallel GGR scaling over mesh sizes)
   bench_update       -> streaming-solver case: batched row-append update
                         throughput vs per-matrix re-factorization
+  bench_serve        -> sharded serving: QRServer flush req/s vs device
+                        count (mesh-dispatched batched kernel)
 
 Run all benches with no args, or name a subset: ``python run.py bench_update``.
 """
@@ -245,8 +247,43 @@ def bench_update():
     return rows
 
 
+def bench_serve():
+    """Sharded serving: QRServer flush throughput vs device count.
+
+    Subprocess per device count (fake host devices, like bench_scaling; on 1
+    physical core the scaling evidence is the per-shard batch share — each
+    device's kernel sweeps ceil(B/ndev) problems — measured wall-clock is
+    still recorded).  67 requests on purpose: the append group lands at a
+    non-block_b-multiple size, so this row regresses the pad-to-multiple
+    path (pre-fix the kernel degraded such batches toward one-problem grid
+    steps).
+    """
+    rows = []
+    reqs, n, p = 67, 16, 8
+    for ndev in (1, 2, 4):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve_qr",
+             "--requests", str(reqs), "--n", str(n), "--rows", str(p),
+             "--mesh", str(ndev)],
+            env=env, capture_output=True, text=True, timeout=900)
+        data = [l for l in out.stdout.splitlines() if l.startswith("serve_qr_")]
+        if not data:
+            rows.append(f"serve_dev{ndev},0,error={out.stderr[-160:]!r}")
+            continue
+        rps = float(data[0].split(",")[1])
+        shard_b = -(-reqs // ndev)
+        rows.append(
+            f"serve_dev{ndev},{1e6 / rps:.0f},"
+            f"req_per_s={rps};requests={reqs};per_shard_batch<={shard_b}"
+        )
+    return rows
+
+
 BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels,
-           bench_scaling, bench_update]
+           bench_scaling, bench_update, bench_serve]
 
 
 def main() -> None:

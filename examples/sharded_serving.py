@@ -1,0 +1,74 @@
+"""Sharded QR serving demo: one micro-batched front-door, a mesh of devices.
+
+The serving thesis of the repo, end-to-end: a stream of small independent
+solver requests (row-append updates + one-shot least squares) accumulates in
+``QRServer``'s per-(kind, shape, dtype) queues; each ``flush()`` stacks every
+group, pads it to ``shards x block_b`` and dispatches ONE ``shard_map`` call
+over the batch axis — the fused Pallas update kernel runs per-shard on its
+slice.  The sharded flush is numerically identical to the single-device one
+(the padding makes every shard's grid exactly the same), which this demo
+verifies request-by-request before printing throughput.
+
+Run with fake devices (the script sets them up itself):
+
+    PYTHONPATH=src python examples/sharded_serving.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.serve_qr import QRServer, _submit_all, make_workload
+from repro.parallel.sharding import make_batch_mesh
+
+
+def main():
+    mesh = make_batch_mesh(4)
+    print(f"mesh: {mesh.shape} over {jax.device_count()} host devices")
+
+    # 67 requests on purpose — prime, so every group pads (the 51-request
+    # append group rounds up to 64 = 4 shards x 2 block_b tiles of 8) and
+    # nothing degrades to one-problem grid steps.
+    reqs = make_workload(67, n=16, rows=8, k=1, seed=0)
+    sharded = QRServer(backend="pallas", mesh=mesh)
+    single = QRServer(backend="pallas")
+
+    ts, t1 = _submit_all(sharded, reqs), _submit_all(single, reqs)
+    sharded.flush(), single.flush()  # also compiles both executables
+
+    err = 0.0
+    for a, b in zip(ts, t1):
+        for xa, xb in zip(sharded.result(a), single.result(b)):
+            err = max(err, float(jnp.abs(xa - xb).max()))
+    print(f"sharded vs single-device flush, {len(reqs)} requests: "
+          f"max |diff| = {err:.2e}")
+    assert err < 1e-5, "sharded flush must match the single-device backend"
+
+    for name, srv in [("single", single), ("sharded-4", sharded)]:
+        tk = _submit_all(srv, reqs)
+        t0 = time.perf_counter()
+        served = srv.flush()
+        jax.block_until_ready(srv.result(tk[-1])[0])
+        dt = time.perf_counter() - t0
+        print(f"{name:>10}: {served / dt:8.1f} req/s "
+              f"({dt / served * 1e6:.0f} us/request)")
+    print("# fake CPU devices timeshare one core — each shard sweeps 16 of "
+          "the 64 padded append problems; real meshes scale wall-clock too")
+
+    # latency-tiered flushing: one-shot solves can flush more often than
+    # state updates (kind-filtered flush is per-group-cycle safe)
+    tk = _submit_all(sharded, reqs)
+    n_lstsq = sharded.flush(kind="lstsq")
+    n_app = sharded.flush(kind="append")
+    print(f"# tiered flush: {n_lstsq} lstsq first, {n_app} appends after — "
+          f"{sum(1 for t in tk if sharded.result(t) is not None)} results ok")
+
+
+if __name__ == "__main__":
+    main()

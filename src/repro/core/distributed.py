@@ -31,16 +31,20 @@ from .ggr import apply_ggr_factors, ggr_column_step_at, ggr_factor_column
 
 __all__ = [
     "distributed_ggr_qr_1d",
+    "shard_map_compat",
     "tsqr",
     "distributed_orthogonalize",
 ]
 
 
-def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True):
     """``jax.shard_map`` across API generations.
 
     The stable spelling (jax.shard_map, check_vma=) landed after 0.4.x; older
     releases ship jax.experimental.shard_map with the check_rep= keyword.
+    Public so other subsystems (the sharded serving path in
+    ``repro.solvers.qr_update`` / ``repro.launch.serve_qr``) map over the
+    same shim instead of re-deriving the version dance.
     """
     sm = getattr(jax, "shard_map", None)
     if sm is not None:
@@ -50,6 +54,9 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
 
     return esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_vma)
+
+
+_shard_map = shard_map_compat  # internal alias, kept for existing call sites
 
 
 def _pvary(x, axes):

@@ -9,6 +9,7 @@ kernels:
   ops        — jit'd public wrappers incl. the full-QR Pallas driver
   ref        — pure-jnp oracles
 """
+from .ggr_update import pad_batch
 from .ops import (
     apply_panel,
     batched_update,
@@ -23,6 +24,7 @@ __all__ = [
     "batched_update",
     "default_interpret",
     "ggr_qr_pallas",
+    "pad_batch",
     "panel_qr",
     "tsqrt",
 ]

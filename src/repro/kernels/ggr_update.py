@@ -21,6 +21,14 @@ Semantics contract: bit-for-bit this is a *different rotation order* than
 ``jax.vmap(ggr_triangularize)`` over the stacked matrix, but both produce the
 unique non-negative-diagonal triangular factor of the same Gram update, so
 they agree to roundoff (validated in tests).
+
+Batch granularity: the grid tiles the batch in ``block_b``-problem steps.
+Arbitrary batch sizes (prime, odd, smaller than ``block_b``) are handled by
+zero-padding the batch up to the next ``block_b`` multiple and slicing the
+output back (``pad_batch`` — also the padding primitive the sharded serving
+path uses to round flushed groups up to ``shards x block_b``).  An all-zero
+problem is a fixed point of the sweep — every divisor is eps-guarded — so
+padding never produces NaNs and costs at most one extra grid step.
 """
 from __future__ import annotations
 
@@ -32,7 +40,27 @@ from jax.experimental import pallas as pl
 
 from .ggr_panel import _EPS, _revcumsum
 
-__all__ = ["batched_update_pallas"]
+__all__ = ["batched_update_pallas", "pad_batch"]
+
+
+def pad_batch(x: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad dim 0 of ``x`` up to the next multiple of ``multiple``.
+
+    The padding primitive of the batched-update stack: the kernel uses it so
+    any batch size runs at full ``block_b`` granularity (no degradation to
+    one-problem grid steps for prime batches), and the sharded serving path
+    reuses it to round flushed request groups up to ``shards x block_b``.
+    Zero problems pass through the eps-guarded sweep unchanged, so callers
+    simply slice ``out[:B]`` to drop them.
+    """
+    if multiple <= 0:
+        raise ValueError(f"pad multiple must be positive, got {multiple}")
+    B = x.shape[0]
+    Bpad = -(-B // multiple) * multiple
+    if Bpad == B:
+        return x
+    widths = [(0, Bpad - B)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
 
 
 def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int):
@@ -98,7 +126,9 @@ def batched_update_pallas(stacked: jax.Array, n_pivots: int,
     upper triangular (rows n_pivots.. are the appended observation rows).
     Returns the (B, m, w) updated batch; callers slice ``[:, :n, :n]``
     (updated R) and ``[:, :n, n:]`` (updated rhs).  ``block_b`` problems are
-    processed per grid step (VMEM budget: block_b·m·w elements resident).
+    processed per grid step (VMEM budget: block_b·m·w elements resident);
+    batches that are not a ``block_b`` multiple are zero-padded up to one
+    (``pad_batch``) and sliced back — never degraded to smaller grid tiles.
     """
     B, m, w = stacked.shape
     if m < n_pivots:
@@ -106,14 +136,15 @@ def batched_update_pallas(stacked: jax.Array, n_pivots: int,
     if m == n_pivots:  # no appended rows — nothing to annihilate
         return stacked
     bb = min(block_b, B)
-    while B % bb:
-        bb -= 1
+    padded = pad_batch(stacked, bb)
+    Bpad = padded.shape[0]
     kern = functools.partial(_batched_update_kernel, n_pivots=n_pivots)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
-        grid=(B // bb,),
-        out_shape=jax.ShapeDtypeStruct((B, m, w), stacked.dtype),
+        grid=(Bpad // bb,),
+        out_shape=jax.ShapeDtypeStruct((Bpad, m, w), stacked.dtype),
         in_specs=[pl.BlockSpec((bb, m, w), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((bb, m, w), lambda i: (i, 0, 0)),
         interpret=interpret,
-    )(stacked)
+    )(padded)
+    return out[:B]

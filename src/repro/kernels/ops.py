@@ -47,7 +47,12 @@ def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256, interpret: bool | 
 
 def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
                    interpret: bool | None = None):
-    """Batched row-append sweep: triangularize n_pivots columns per problem."""
+    """Batched row-append sweep: triangularize n_pivots columns per problem.
+
+    Any batch size is accepted: non-``block_b``-multiple batches are padded
+    up with zero problems and sliced back (see ``ggr_update.pad_batch``), so
+    the grid always runs at full ``block_b`` granularity.
+    """
     itp = default_interpret() if interpret is None else interpret
     return batched_update_pallas(stacked, n_pivots=n_pivots, block_b=block_b,
                                  interpret=itp)

@@ -3,20 +3,37 @@
 The realistic heavy-traffic QR workload is millions of *small* independent
 requests (RLS/Kalman state updates, windowed regressions), not one giant
 factorization.  ``QRServer`` is the batching layer: requests accumulate in
-per-(kind, shape) queues; ``flush()`` stacks each group and dispatches ONE
-fused call per group — the batched Pallas update kernel for row-appends, a
-vmapped augmented-GGR sweep for one-shot lstsq — then scatters results back
+per-(kind, shape, dtype) queues; ``flush()`` stacks each group and dispatches
+ONE fused call per group — the batched Pallas update kernel for row-appends,
+a vmapped augmented-GGR sweep for one-shot lstsq — then scatters results back
 to submission order.  ``backend="reference"`` runs identical pure-JAX
 semantics for A/B checking.
+
+Sharded serving: pass ``mesh=`` (a 1-D device mesh, e.g. from
+``repro.parallel.sharding.make_batch_mesh``) and every flushed group is
+dispatched through ``shard_map`` over the mesh's batch axis — the fused
+kernel runs once per shard on its slice of the stacked requests.  Groups are
+zero-padded up to ``shards x block_b`` (the ``pad_batch`` primitive) so every
+shard sees an identical full-granularity grid; results are sliced back, so
+sharded and single-device flushes agree bit-for-bit.  This is the paper's
+co-design thesis at the serving layer: the fused sweep stays resident per
+device, throughput scales with device count.
 
     PYTHONPATH=src python -m repro.launch.serve_qr --requests 64 \
         --n 16 --rows 8 --backend pallas
 
-emits one CSV line per flush with throughput and a cross-backend check.
+    # 4-way sharded flush on a CPU host (fake devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m repro.launch.serve_qr --requests 67 --mesh 4
+
+emits one CSV line per run with throughput; ``--check`` folds a cross-backend
+max-error into the ``derived`` column (rows always have exactly 3 fields).
 """
 from __future__ import annotations
 
 import argparse
+import functools
+import sys
 import time
 from dataclasses import dataclass, field
 
@@ -35,12 +52,27 @@ def _batched_lstsq(Ab, bb):
     return jax.vmap(lambda A, b: ggr_lstsq(A, b)[:2])(Ab, bb)  # (x, resid)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_lstsq_fn(mesh, mesh_axis: str):
+    """jit'd shard_map lstsq dispatch, cached per mesh (Mesh is hashable) so
+    repeated flushes reuse one executable instead of re-tracing."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import shard_map_compat
+
+    return jax.jit(shard_map_compat(
+        _batched_lstsq, mesh=mesh,
+        in_specs=(P(mesh_axis), P(mesh_axis)),
+        out_specs=(P(mesh_axis), P(mesh_axis)),
+    ))
+
+
 @dataclass(frozen=True)
 class _Ticket:
     kind: str          # "append" | "lstsq"
-    group: tuple       # shape signature the request was queued under
+    group: tuple       # (kind, shapes, dtypes) signature the request queued under
     index: int         # position within its group
-    generation: int    # flush cycle the request belongs to
+    cycle: int         # the group's flush cycle the request belongs to
 
 
 @dataclass
@@ -50,54 +82,82 @@ class QRServer:
     backend: "pallas" (fused batched kernel) or "reference" (vmapped jnp).
     max_batch: dispatch granularity — each group is flushed in chunks of at
     most this many stacked requests (bounds the kernel's VMEM block count).
+    mesh/mesh_axis: optional 1-D device mesh; when set, each chunk is
+    dispatched through ``shard_map`` over ``mesh_axis`` with the batch padded
+    to ``shards x block_b`` (appends) or ``shards`` (lstsq) and sliced back.
+    Requests of the same shape but different dtypes land in *different*
+    groups — stacking never silently promotes a request's dtype.
     """
 
     backend: str = "pallas"
     max_batch: int = 64
     interpret: bool | None = None
+    mesh: object | None = None   # jax.sharding.Mesh; object-typed to keep the
+    mesh_axis: str = "batch"     # dataclass importable before jax device init
+    block_b: int = 8
     _queues: dict = field(default_factory=dict)
-    _results: dict = field(default_factory=dict)  # group -> (generation, outs)
-    _generation: int = 0
+    _results: dict = field(default_factory=dict)  # group -> (cycle, outs)
+    _cycles: dict = field(default_factory=dict)   # group -> completed flush count
+
+    def _group_cycle(self, key) -> int:
+        return self._cycles.get(key, 0)
 
     def submit_append(self, R, U, d=None, Y=None) -> _Ticket:
         """Queue a row-append update of one (R[, d]) state."""
         R, U = jnp.asarray(R), jnp.asarray(U)
         has_rhs = d is not None
-        key = ("append", R.shape, U.shape, has_rhs,
-               None if not has_rhs else jnp.asarray(d).shape)
+        if has_rhs:
+            d, Y = jnp.asarray(d), jnp.asarray(Y)
+            rhs_sig = (d.shape, str(d.dtype), Y.shape, str(Y.dtype))
+        else:
+            rhs_sig = None
+        key = ("append", R.shape, str(R.dtype), U.shape, str(U.dtype), rhs_sig)
         q = self._queues.setdefault(key, [])
-        q.append((R, U) if not has_rhs else (R, U, jnp.asarray(d), jnp.asarray(Y)))
-        return _Ticket("append", key, len(q) - 1, self._generation)
+        q.append((R, U) if not has_rhs else (R, U, d, Y))
+        return _Ticket("append", key, len(q) - 1, self._group_cycle(key))
 
     def submit_lstsq(self, A, b) -> _Ticket:
         """Queue a one-shot least-squares solve min ||Ax - b||."""
         A, b = jnp.asarray(A), jnp.asarray(b)
-        key = ("lstsq", A.shape, b.shape)
+        key = ("lstsq", A.shape, str(A.dtype), b.shape, str(b.dtype))
         q = self._queues.setdefault(key, [])
         q.append((A, b))
-        return _Ticket("lstsq", key, len(q) - 1, self._generation)
+        return _Ticket("lstsq", key, len(q) - 1, self._group_cycle(key))
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
     def _dispatch_append(self, key, reqs):
-        has_rhs = key[3]
+        has_rhs = key[5] is not None
         outs = []
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
             Rb = jnp.stack([r[0] for r in chunk])
             Ub = jnp.stack([r[1] for r in chunk])
+            common = dict(backend=self.backend, interpret=self.interpret,
+                          block_b=self.block_b, mesh=self.mesh,
+                          mesh_axis=self.mesh_axis)
             if has_rhs:
                 db = jnp.stack([r[2] for r in chunk])
                 Yb = jnp.stack([r[3] for r in chunk])
-                Rn, dn = qr_append_rows_batched(
-                    Rb, Ub, db, Yb, backend=self.backend, interpret=self.interpret)
+                Rn, dn = qr_append_rows_batched(Rb, Ub, db, Yb, **common)
                 outs.extend((Rn[i], dn[i]) for i in range(len(chunk)))
             else:
-                Rn = qr_append_rows_batched(
-                    Rb, Ub, backend=self.backend, interpret=self.interpret)
+                Rn = qr_append_rows_batched(Rb, Ub, **common)
                 outs.extend(Rn[i] for i in range(len(chunk)))
         return outs
+
+    def _lstsq_call(self, Ab, bb):
+        if self.mesh is None:
+            return _batched_lstsq(Ab, bb)
+        from repro.kernels import pad_batch
+
+        shards = self.mesh.shape[self.mesh_axis]
+        B = Ab.shape[0]
+        # zero problems are eps-guarded all the way through the solve
+        Ap, bp = pad_batch(Ab, shards), pad_batch(bb, shards)
+        xs, rs = _sharded_lstsq_fn(self.mesh, self.mesh_axis)(Ap, bp)
+        return xs[:B], rs[:B]
 
     def _dispatch_lstsq(self, key, reqs):
         outs = []
@@ -105,42 +165,54 @@ class QRServer:
             chunk = reqs[lo:lo + self.max_batch]
             Ab = jnp.stack([r[0] for r in chunk])
             bb = jnp.stack([r[1] for r in chunk])
-            xs, rs = _batched_lstsq(Ab, bb)
+            xs, rs = self._lstsq_call(Ab, bb)
             outs.extend((xs[i], rs[i]) for i in range(len(chunk)))
         return outs
 
-    def flush(self) -> int:
-        """Dispatch every queued group; returns the number of requests served.
+    def flush(self, kind: str | None = None) -> int:
+        """Dispatch queued groups; returns the number of requests served.
 
-        Results become available via ``result(ticket)``; the queues reset and
-        a new flush generation begins (tickets are single-cycle: a later flush
-        of the same request shape expires them).
+        ``kind`` (None | "append" | "lstsq") restricts the flush to matching
+        groups — e.g. a latency-sensitive deployment can flush one-shot
+        solves more often than state updates.  Results become available via
+        ``result(ticket)``; flushed queues reset and each flushed group's
+        cycle counter advances (tickets are single-cycle *per group*: a later
+        flush of the same group expires them, flushes of other groups don't).
         """
+        if kind not in (None, "append", "lstsq"):
+            raise ValueError(f"unknown kind {kind!r}")
         served = 0
-        for key, reqs in self._queues.items():
+        for key in [k for k in self._queues
+                    if kind is None or k[0] == kind]:
+            reqs = self._queues.pop(key)
             if key[0] == "append":
                 outs = self._dispatch_append(key, reqs)
             else:
                 outs = self._dispatch_lstsq(key, reqs)
-            self._results[key] = (self._generation, outs)
+            cycle = self._group_cycle(key)
+            self._results[key] = (cycle, outs)
+            self._cycles[key] = cycle + 1
             served += len(reqs)
-        self._queues = {}
-        self._generation += 1
         return served
 
     def result(self, ticket: _Ticket):
         """Fetch a flushed request's result.
 
-        Raises KeyError if the ticket's cycle has not been flushed yet, or if
-        a later flush of the same request group already replaced it.
+        Raises KeyError if the ticket's group has not been flushed since the
+        request was queued (still pending — including when flushes of *other*
+        groups have happened meanwhile), or if a later flush of the same
+        group already replaced the result.
         """
         entry = self._results.get(ticket.group)
-        if entry is None or entry[0] != ticket.generation:
-            state = ("not yet flushed" if ticket.generation >= self._generation
-                     else "expired by a later flush of the same request shape")
-            raise KeyError(f"ticket {ticket.kind}#{ticket.index} "
-                           f"(cycle {ticket.generation}): {state}")
-        return entry[1][ticket.index]
+        if entry is not None and entry[0] == ticket.cycle:
+            return entry[1][ticket.index]
+        if self._group_cycle(ticket.group) <= ticket.cycle:
+            queued = len(self._queues.get(ticket.group, ()))
+            state = f"not yet flushed ({queued} request(s) queued in its group)"
+        else:
+            state = "expired by a later flush of the same request group"
+        raise KeyError(f"ticket {ticket.kind}#{ticket.index} "
+                       f"(group cycle {ticket.cycle}): {state}")
 
 
 def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
@@ -172,7 +244,7 @@ def _submit_all(server, reqs):
     return tickets
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--n", type=int, default=16)
@@ -180,12 +252,25 @@ def main():
     ap.add_argument("--nrhs", type=int, default=1)
     ap.add_argument("--backend", default="pallas", choices=["pallas", "reference"])
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--mesh", type=int, default=1, metavar="N",
+                    help="shard flushed groups over an N-device batch mesh "
+                         "(on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     ap.add_argument("--check", action="store_true",
                     help="cross-check a sample of results against the other backend")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh > 1:
+        from repro.parallel.sharding import make_batch_mesh
+
+        try:
+            mesh = make_batch_mesh(args.mesh)
+        except ValueError as e:
+            sys.exit(str(e))
 
     reqs = make_workload(args.requests, args.n, args.rows, args.nrhs)
-    server = QRServer(backend=args.backend, max_batch=args.max_batch)
+    server = QRServer(backend=args.backend, max_batch=args.max_batch, mesh=mesh)
 
     tickets = _submit_all(server, reqs)  # warmup flush compiles the kernels
     server.flush()
@@ -207,11 +292,12 @@ def main():
         for tk, ot in list(zip(tickets, oticks))[:: max(1, len(tickets) // 8)]:
             a, b = server.result(tk), other.result(ot)
             err = max(err, max(float(jnp.abs(x - y).max()) for x, y in zip(a, b)))
-        check = f",xbackend_maxerr={err:.2e}"
+        check = f";xbackend_maxerr={err:.2e}"
 
+    # derived column is ';'-separated key=val pairs — rows stay 3 CSV fields
     print("name,req_per_s,derived")
-    print(f"serve_qr_{args.backend}_n{args.n}_p{args.rows},"
-          f"{served / dt:.1f},batches<= {args.max_batch}{check}")
+    print(f"serve_qr_{args.backend}_n{args.n}_p{args.rows},{served / dt:.1f},"
+          f"max_batch={args.max_batch};mesh={args.mesh}{check}")
 
 
 if __name__ == "__main__":

@@ -269,11 +269,14 @@ def moe_fwd(params, h, cfg: ArchConfig):
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
     flat_ids = ids.reshape(G, Tg * k).astype(jnp.int32)
-    # rank of each (token, slot) within its expert, per group
-    order = jnp.argsort(flat_ids, axis=-1, stable=True)
+    # rank of each (token, slot) within its expert, per group.  argsort /
+    # searchsorted emit int64 under x64 — cast scatter indices and values to
+    # int32 explicitly so the pos scatter below never needs a narrowing cast
+    # (a FutureWarning today, an error in future jax; filterwarnings enforces).
+    order = jnp.argsort(flat_ids, axis=-1, stable=True).astype(jnp.int32)
     sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
     first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(sorted_ids)
-    ranks = jnp.arange(Tg * k)[None, :] - first
+    ranks = (jnp.arange(Tg * k)[None, :] - first).astype(jnp.int32)
     pos = jnp.zeros((G, Tg * k), jnp.int32)
     pos = jax.vmap(lambda p, o, r: p.at[o].set(r))(pos, order, ranks)
     keep = pos < Cg

@@ -6,6 +6,11 @@ expert-parallel MoE weights), DP over (pod, data), optional sequence
 parallelism for activations.  All specs go through GSPMD (jit in/out
 shardings), so non-divisible dimensions are legal (padded internally);
 the rules still prefer divisible choices where the config allows.
+
+Also home to the *serving* mesh helpers (``make_batch_mesh`` /
+``batch_shard_spec``): the solver front-door shards micro-batched request
+groups over a 1-D batch axis — the pure data-parallel limit of the rules
+above, kept here so training and serving agree on mesh construction.
 """
 from __future__ import annotations
 
@@ -14,6 +19,33 @@ from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SERVE_BATCH_AXIS = "batch"
+
+
+def make_batch_mesh(num_devices: int | None = None,
+                    axis: str = SERVE_BATCH_AXIS) -> Mesh:
+    """1-D device mesh for sharded batch serving (``QRServer(mesh=...)``).
+
+    ``num_devices=None`` takes every visible device.  On CPU hosts, fake
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (must be set before jax initializes).  Flushed request groups are padded
+    to a multiple of ``num_devices x block_b`` and split over ``axis`` — see
+    ``repro.solvers.qr_update.qr_append_rows_batched``.
+    """
+    avail = jax.device_count()
+    n = avail if num_devices is None else num_devices
+    if n > avail:
+        raise ValueError(
+            f"requested a {n}-device batch mesh but only {avail} devices are "
+            f"visible (on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before importing jax)")
+    return jax.make_mesh((n,), (axis,))
+
+
+def batch_shard_spec(ndim: int, axis: str = SERVE_BATCH_AXIS) -> P:
+    """PartitionSpec sharding dim 0 (the stacked-request dim) over ``axis``."""
+    return P(axis, *([None] * (ndim - 1)))
 
 
 @dataclasses.dataclass(frozen=True)

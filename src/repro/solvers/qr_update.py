@@ -28,6 +28,8 @@ rows.  Invariants maintained: ``R^T R = sum_i u_i u_i^T`` and
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -92,11 +94,47 @@ def qr_append_rows(R: jax.Array, U: jax.Array, d: jax.Array | None = None,
     return R_new, X[:n, n:]
 
 
+def _update_stacked(stacked: jax.Array, n: int, backend: str,
+                    interpret: bool | None, block_b: int) -> jax.Array:
+    """Single-device batched sweep over stacked (B, n+p, w) problems."""
+    if backend == "reference":
+        return jax.vmap(lambda X: ggr_triangularize(X, n))(stacked)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.kernels import batched_update  # deferred: solvers -> kernels edge
+
+    return batched_update(stacked, n_pivots=n, block_b=block_b,
+                          interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_update_fn(mesh, mesh_axis: str, n: int, backend: str,
+                       interpret: bool | None, block_b: int):
+    """jit'd shard_map dispatch, cached per (mesh, schedule) so repeated
+    flushes of the same group shape reuse one executable instead of
+    re-tracing the mapped kernel every call (Mesh is hashable)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import shard_map_compat
+
+    # check_vma off: pallas_call has no replication rule; the map is
+    # trivially element-wise over shards (no collectives), so safe.
+    return jax.jit(shard_map_compat(
+        lambda x: _update_stacked(x, n, backend, interpret, block_b),
+        mesh=mesh,
+        in_specs=P(mesh_axis),
+        out_specs=P(mesh_axis),
+        check_vma=False,
+    ))
+
+
 def qr_append_rows_batched(R: jax.Array, U: jax.Array,
                            d: jax.Array | None = None,
                            Y: jax.Array | None = None,
                            *, backend: str = "pallas",
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           block_b: int = 8,
+                           mesh=None, mesh_axis: str = "batch"):
     """Batch of independent row-append updates in one fused kernel launch.
 
     R: (B, n, n) upper triangular, U: (B, p, n), optional d: (B, n, k),
@@ -104,21 +142,30 @@ def qr_append_rows_batched(R: jax.Array, U: jax.Array,
     (whose compact active-set schedule *relies* on R's triangularity);
     "reference" vmaps the pure-JAX stacked sweep.  Both produce the unique
     non-negative-diagonal factor, agreeing to roundoff.
+
+    Sharded mode: pass a ``jax.sharding.Mesh`` and the name of its batch axis
+    (default "batch") to split the batch over the mesh with one kernel
+    launch per shard (``shard_map`` via the ``core.distributed`` version
+    shim).  The batch is zero-padded up to ``shards x block_b`` — every shard
+    gets an identical, full-granularity grid — and the padding is sliced off
+    afterwards, so any batch size (including prime sizes and B < shards) is
+    legal and numerically identical to the single-device dispatch.
     """
     n = R.shape[2]
     if (d is None) != (Y is None):
         raise ValueError("pass both d and Y, or neither")
-    if backend == "reference":
-        if d is None:
-            return jax.vmap(lambda r, u: qr_append_rows(r, u))(R, U)
-        return jax.vmap(qr_append_rows)(R, U, d, Y)
-    if backend != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
-    from repro.kernels import batched_update  # deferred: solvers -> kernels edge
-
     stacked = jax.vmap(_stack_update, in_axes=(0, 0, 0 if d is not None else None,
                                               0 if Y is not None else None))(R, U, d, Y)
-    out = batched_update(stacked, n_pivots=n, interpret=interpret)
+    if mesh is None:
+        out = _update_stacked(stacked, n, backend, interpret, block_b)
+    else:
+        from repro.kernels import pad_batch
+
+        B = stacked.shape[0]
+        shards = mesh.shape[mesh_axis]
+        padded = pad_batch(stacked, shards * block_b)
+        fn = _sharded_update_fn(mesh, mesh_axis, n, backend, interpret, block_b)
+        out = fn(padded)[:B]
     R_new = jnp.triu(out[:, :n, :n])
     if d is None:
         return R_new

@@ -179,6 +179,34 @@ def test_batched_pallas_matches_vmapped_reference(dtype, tol):
     np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("B", [1, 7, 67])
+def test_batched_pallas_nondivisible_batches(B):
+    """Prime/odd/small batches run via pad-to-block_b, not degraded tiling."""
+    n, p, k = 6, 3, 2
+    rng = np.random.default_rng(40 + B)
+    Rb = jnp.asarray(np.triu(rng.standard_normal((B, n, n))), jnp.float32)
+    Ub = jnp.asarray(rng.standard_normal((B, p, n)), jnp.float32)
+    db = jnp.asarray(rng.standard_normal((B, n, k)), jnp.float32)
+    Yb = jnp.asarray(rng.standard_normal((B, p, k)), jnp.float32)
+    Rp, dp = qr_append_rows_batched(Rb, Ub, db, Yb, backend="pallas", interpret=True)
+    Rr, dr = qr_append_rows_batched(Rb, Ub, db, Yb, backend="reference")
+    assert Rp.shape == (B, n, n) and dp.shape == (B, n, k)
+    np.testing.assert_allclose(np.asarray(Rp), np.asarray(Rr), rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr), rtol=5e-5, atol=5e-5)
+
+
+def test_pad_batch_primitive():
+    from repro.kernels import pad_batch
+
+    x = jnp.ones((7, 3, 2))
+    p = pad_batch(x, 8)
+    assert p.shape == (8, 3, 2)
+    np.testing.assert_array_equal(np.asarray(p[7]), 0.0)
+    assert pad_batch(x, 7) is x  # exact multiple: no copy
+    with pytest.raises(ValueError, match="positive"):
+        pad_batch(x, 0)
+
+
 def test_batched_pallas_no_rhs():
     B, n, p = 3, 6, 4
     rng = np.random.default_rng(26)
@@ -257,6 +285,77 @@ def test_qr_server_ticket_lifecycle():
                                rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(x2, np.linalg.lstsq(A2, b, rcond=None)[0],
                                rtol=1e-3, atol=1e-4)
+
+
+def test_qr_server_mixed_dtype_groups():
+    """Same-shape requests of different dtypes must not be stacked together
+    (stacking would silently promote and return the wrong dtype)."""
+    from repro.launch.serve_qr import QRServer
+
+    rng = np.random.default_rng(32)
+    A32 = rng.standard_normal((12, 3)).astype(np.float32)
+    b32 = rng.standard_normal((12, 1)).astype(np.float32)
+    A64 = rng.standard_normal((12, 3)).astype(np.float64)
+    b64 = rng.standard_normal((12, 1)).astype(np.float64)
+    server = QRServer(backend="reference")
+    t32 = server.submit_lstsq(A32, b32)
+    t64 = server.submit_lstsq(A64, b64)
+    assert t32.group != t64.group
+    assert len(server._queues) == 2
+    server.flush()
+    x32, _ = server.result(t32)
+    x64, _ = server.result(t64)
+    assert x32.dtype == jnp.float32
+    assert x64.dtype == jnp.float64
+    np.testing.assert_allclose(np.asarray(x64),
+                               np.linalg.lstsq(A64, b64, rcond=None)[0],
+                               rtol=1e-10, atol=1e-12)
+
+    # append side: mixed-dtype states also stay separate
+    R32 = np.triu(rng.standard_normal((3, 3))).astype(np.float32)
+    R64 = R32.astype(np.float64)
+    U = rng.standard_normal((2, 3))
+    ta = server.submit_append(R32, U.astype(np.float32))
+    tb = server.submit_append(R64, U.astype(np.float64))
+    assert ta.group != tb.group
+    server.flush()
+    assert server.result(ta).dtype == jnp.float32
+    assert server.result(tb).dtype == jnp.float64
+
+
+def test_qr_server_pending_vs_expired_classification():
+    """A ticket whose group was never dispatched reads 'not yet flushed' even
+    when flushes of OTHER groups happened meanwhile; only a later flush of
+    the ticket's own group expires it."""
+    from repro.launch.serve_qr import QRServer
+
+    rng = np.random.default_rng(33)
+    A = rng.standard_normal((12, 3)).astype(np.float32)
+    b = rng.standard_normal((12, 1)).astype(np.float32)
+    R = np.triu(rng.standard_normal((3, 3))).astype(np.float32)
+    U = rng.standard_normal((2, 3)).astype(np.float32)
+    server = QRServer(backend="reference")
+
+    t_app = server.submit_append(R, U)
+    server.submit_lstsq(A, b)
+    assert server.flush(kind="lstsq") == 1  # append group NOT dispatched
+    # never-dispatched must not be misreported as expired
+    with pytest.raises(KeyError, match="not yet flushed"):
+        server.result(t_app)
+    assert server.pending() == 1
+    assert server.flush() == 1
+    server.result(t_app)  # now available
+
+    # genuine expiry: a later flush of the same group replaces the results
+    t_old = server.submit_lstsq(A, b)
+    server.flush(kind="lstsq")
+    server.submit_lstsq(A, b)
+    server.flush(kind="lstsq")
+    with pytest.raises(KeyError, match="expired by a later flush"):
+        server.result(t_old)
+
+    with pytest.raises(ValueError, match="unknown kind"):
+        server.flush(kind="bogus")
 
 
 def test_rls_scan_jit_compatible():
