@@ -12,6 +12,13 @@ verifies request-by-request before printing throughput.
 Run with fake devices (the script sets them up itself):
 
     PYTHONPATH=src python examples/sharded_serving.py
+
+Outside this script, bring up the same host mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (before jax imports)
+and pass ``--mesh N`` to the serving CLI (``python -m repro.launch.serve_qr``)
+or ``mesh=make_batch_mesh(N)`` to ``QRServer``.  The serving dataflow diagram
+lives in ``docs/architecture.md``; the solver API guide (including the
+``kalman`` request kind this server also batches) in ``docs/solvers.md``.
 """
 import os
 

@@ -11,6 +11,12 @@ The windowed/forgetting trackers follow the drift; the full-history solver
 goes stale — and the streaming state never re-touches old rows.
 
     PYTHONPATH=src python examples/streaming_rls.py
+
+API guide with runnable snippets: ``docs/solvers.md``; paper-to-code map:
+``docs/architecture.md``.  The batched/sharded version of this workload is
+``examples/sharded_serving.py`` (serving CLI: ``--mesh N`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a CPU host
+mesh); the state-estimation sibling is ``examples/tracking_kalman.py``.
 """
 import numpy as np
 

@@ -4,10 +4,16 @@ The realistic heavy-traffic QR workload is millions of *small* independent
 requests (RLS/Kalman state updates, windowed regressions), not one giant
 factorization.  ``QRServer`` is the batching layer: requests accumulate in
 per-(kind, shape, dtype) queues; ``flush()`` stacks each group and dispatches
-ONE fused call per group — the batched Pallas update kernel for row-appends,
-a vmapped augmented-GGR sweep for one-shot lstsq — then scatters results back
-to submission order.  ``backend="reference"`` runs identical pure-JAX
-semantics for A/B checking.
+ONE fused call per group — the batched Pallas update kernel for row-appends
+and SRIF Kalman steps, a vmapped augmented-GGR sweep for one-shot lstsq —
+then scatters results back to submission order.  ``backend="reference"`` runs
+identical pure-JAX semantics for A/B checking.
+
+Request kinds: ``append`` (row-append a compact ``(R, d)`` state), ``lstsq``
+(one-shot solve), ``kalman`` (one square-root information filter
+predict+observe step — ``repro.solvers.kalman.kf_step`` — batched through
+``kf_step_batched``'s fused stacked sweep; the millions-of-small-trackers
+workload).
 
 Sharded serving: pass ``mesh=`` (a 1-D device mesh, e.g. from
 ``repro.parallel.sharding.make_batch_mesh``) and every flushed group is
@@ -69,10 +75,13 @@ def _sharded_lstsq_fn(mesh, mesh_axis: str):
 
 @dataclass(frozen=True)
 class _Ticket:
-    kind: str          # "append" | "lstsq"
+    kind: str          # "append" | "lstsq" | "kalman"
     group: tuple       # (kind, shapes, dtypes) signature the request queued under
     index: int         # position within its group
     cycle: int         # the group's flush cycle the request belongs to
+
+
+_KINDS = ("append", "lstsq", "kalman")
 
 
 @dataclass
@@ -124,7 +133,30 @@ class QRServer:
         q.append((A, b))
         return _Ticket("lstsq", key, len(q) - 1, self._group_cycle(key))
 
+    def submit_kalman(self, R, d, F, Qi, H, z, G=None) -> _Ticket:
+        """Queue one SRIF predict+observe step of a ``(R, d)`` Kalman state.
+
+        Arguments follow ``repro.solvers.kalman.kf_step``: dynamics ``F``,
+        upper-triangular process-noise information square root ``Qi``
+        (``info_sqrt(Q)``), whitened measurement model ``(H, z)`` and
+        optional noise input map ``G``.  Requests sharing shapes/dtypes land
+        in one group and advance in a single fused ``kf_step_batched``
+        dispatch at the next flush; the result is the stepped ``(R', d')``.
+        """
+        R, d, F, Qi = map(jnp.asarray, (R, d, F, Qi))
+        H, z = jnp.asarray(H), jnp.asarray(z)
+        if G is not None:
+            G = jnp.asarray(G)
+        g_sig = None if G is None else (G.shape, str(G.dtype))
+        key = ("kalman", R.shape, str(R.dtype), d.shape, str(d.dtype),
+               F.shape, str(F.dtype), Qi.shape, str(Qi.dtype),
+               H.shape, str(H.dtype), z.shape, str(z.dtype), g_sig)
+        q = self._queues.setdefault(key, [])
+        q.append((R, d, F, Qi, H, z) if G is None else (R, d, F, Qi, H, z, G))
+        return _Ticket("kalman", key, len(q) - 1, self._group_cycle(key))
+
     def pending(self) -> int:
+        """Number of submitted requests not yet dispatched by a flush."""
         return sum(len(q) for q in self._queues.values())
 
     def _dispatch_append(self, key, reqs):
@@ -169,17 +201,46 @@ class QRServer:
             outs.extend((xs[i], rs[i]) for i in range(len(chunk)))
         return outs
 
+    def _dispatch_kalman(self, key, reqs):
+        from repro.solvers.kalman import kf_step_batched
+
+        has_G = key[-1] is not None
+        outs = []
+        for lo in range(0, len(reqs), self.max_batch):
+            chunk = reqs[lo:lo + self.max_batch]
+
+            def field(i):
+                # model matrices are usually one shared object across the
+                # whole fleet (one dynamics model, many tracks): pass them
+                # 2-D and let kf_step_batched broadcast instead of stacking
+                # B redundant copies; per-filter models still stack.
+                if i >= 2 and all(r[i] is chunk[0][i] for r in chunk):
+                    return chunk[0][i]
+                return jnp.stack([r[i] for r in chunk])
+
+            cols = [field(i) for i in range(len(chunk[0]))]
+            Gb = cols[6] if has_G else None
+            Rn, dn = kf_step_batched(cols[0], cols[1], cols[2], cols[3],
+                                     cols[4], cols[5], Gb,
+                                     backend=self.backend,
+                                     interpret=self.interpret,
+                                     block_b=self.block_b, mesh=self.mesh,
+                                     mesh_axis=self.mesh_axis)
+            outs.extend((Rn[i], dn[i]) for i in range(len(chunk)))
+        return outs
+
     def flush(self, kind: str | None = None) -> int:
         """Dispatch queued groups; returns the number of requests served.
 
-        ``kind`` (None | "append" | "lstsq") restricts the flush to matching
-        groups — e.g. a latency-sensitive deployment can flush one-shot
-        solves more often than state updates.  Results become available via
-        ``result(ticket)``; flushed queues reset and each flushed group's
-        cycle counter advances (tickets are single-cycle *per group*: a later
-        flush of the same group expires them, flushes of other groups don't).
+        ``kind`` (None | "append" | "lstsq" | "kalman") restricts the flush
+        to matching groups — e.g. a latency-sensitive deployment can flush
+        one-shot solves more often than state updates.  Results become
+        available via ``result(ticket)``; flushed queues reset and each
+        flushed group's cycle counter advances (tickets are single-cycle
+        *per group*: a later flush of the same group expires them, flushes
+        of other groups don't).
         """
-        if kind not in (None, "append", "lstsq"):
+        if kind is not None and kind not in _KINDS:
             raise ValueError(f"unknown kind {kind!r}")
         served = 0
         for key in [k for k in self._queues
@@ -187,6 +248,8 @@ class QRServer:
             reqs = self._queues.pop(key)
             if key[0] == "append":
                 outs = self._dispatch_append(key, reqs)
+            elif key[0] == "kalman":
+                outs = self._dispatch_kalman(key, reqs)
             else:
                 outs = self._dispatch_lstsq(key, reqs)
             cycle = self._group_cycle(key)
@@ -245,6 +308,12 @@ def _submit_all(server, reqs):
 
 
 def main(argv=None):
+    """Serving CLI: run a synthetic workload through one timed flush.
+
+    Emits one 3-field CSV row (name, req_per_s, derived); ``--mesh N``
+    shards flushed groups over an N-device batch mesh and ``--check``
+    folds a cross-backend max-error into the derived column.
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--n", type=int, default=16)

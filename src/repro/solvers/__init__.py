@@ -27,9 +27,32 @@ Quick tour::
     from repro.solvers import qr_append_rows_batched
     R_batch2 = qr_append_rows_batched(R_batch, U_batch, backend="pallas")
 
+    # state estimation: square-root Kalman filtering is the same sweep
+    from repro.solvers import kf_init, kf_predict, kf_observe, kf_step_batched
+    st = kf_init(x0, P0)               # (R, d) information square root
+    st = kf_predict(st, F, Qi)         # time update = augmented GGR sweep
+    st = kf_observe(st, H, z)          # measurement update = row append
+    Rb, db = kf_step_batched(R_b, d_b, F, Qi, H, z_b)  # many filters, one launch
+
 Serving front-door (micro-batching dispatcher): ``repro.launch.serve_qr``.
 Kernel: ``repro.kernels.ggr_update`` (grid over batch, VMEM-resident sweep).
+Docs: ``docs/solvers.md`` (API guide), ``docs/architecture.md`` (paper map).
 """
+from .kalman import (
+    KalmanState,
+    KalmanTrajectory,
+    info_sqrt,
+    kf_cov,
+    kf_filter,
+    kf_init,
+    kf_mean,
+    kf_observe,
+    kf_predict,
+    kf_smooth,
+    kf_step,
+    kf_step_batched,
+    whiten_measurement,
+)
 from .lstsq import LstsqResult, RecursiveLS, RLSState, ggr_lstsq, solve_triangular
 from .qr_update import (
     qr_append_rows,
@@ -39,13 +62,26 @@ from .qr_update import (
 )
 
 __all__ = [
+    "KalmanState",
+    "KalmanTrajectory",
     "LstsqResult",
     "RLSState",
     "RecursiveLS",
     "ggr_lstsq",
+    "info_sqrt",
+    "kf_cov",
+    "kf_filter",
+    "kf_init",
+    "kf_mean",
+    "kf_observe",
+    "kf_predict",
+    "kf_smooth",
+    "kf_step",
+    "kf_step_batched",
     "qr_append_rows",
     "qr_append_rows_batched",
     "qr_downdate_row",
     "qr_rank1_update",
     "solve_triangular",
+    "whiten_measurement",
 ]
