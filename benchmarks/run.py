@@ -15,8 +15,14 @@ Paper artifact map:
                         count (mesh-dispatched batched kernel)
   bench_kalman       -> SRIF state estimation: fused-batched kf_step_batched
                         vs dispatch-per-filter stepping
+  bench_blocked      -> blocked-QR pipeline shootout: the tree-coupled panel
+                        driver vs the reference tile driver, unblocked
+                        ggr_qr2 and jnp.linalg.qr (GFLOP/s + speedups);
+                        always writes BENCH_blocked.json
 
 Run all benches with no args, or name a subset: ``python run.py bench_update``.
+``--check`` runs bench_blocked in small-shape smoke mode (correctness
+asserted, nonzero exit on failure) — the tier-1 CI hook.
 """
 from __future__ import annotations
 
@@ -340,12 +346,87 @@ def bench_kalman():
     return rows
 
 
+_CHECK = False  # set by --check: small shapes, assert correctness, hard-fail
+
+
+def bench_blocked():
+    """Blocked-QR pipeline shootout (the perf trajectory artifact).
+
+    The tree-coupled panel driver (``ggr_qr_blocked``) against the previous
+    Python-unrolled tile driver (``ggr_qr_blocked_reference``), the unblocked
+    ``ggr_qr2`` sweep, the fused VMEM-residency schedule and ``jnp.linalg.qr``
+    on square f32 problems.  Emits GFLOP/s (QR flops = 4/3 n^3), max |R| error
+    vs a float64 LAPACK oracle, and the wall-clock speedup of the new driver
+    over the reference tiles.  Always writes ``BENCH_blocked.json`` next to
+    the CSV output so CI can track the trajectory; ``--check`` shrinks the
+    shapes to smoke size and asserts correctness with a nonzero exit.
+    """
+    import json
+
+    from repro.core import ggr_qr2, ggr_qr_blocked, ggr_qr_blocked_reference
+
+    rows, records = [], []
+    rng = np.random.default_rng(5)
+    sizes = [256] if _CHECK else [512, 1024]
+    reps, warmup = (1, 1) if _CHECK else (3, 1)
+    failures = []
+    for n in sizes:
+        A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+        Rnp = np.linalg.qr(np.asarray(A, np.float64), mode="r")
+        flops = 4.0 / 3.0 * n**3
+        ref_tile = 128 if n % 128 == 0 else 64
+        entries = [
+            ("blocked_tree", lambda x: ggr_qr_blocked(x, schedule="tree")),
+            ("reference_tiles",
+             lambda x: ggr_qr_blocked_reference(x, tile=ref_tile)),
+            ("linalg_qr", jax.jit(lambda x: jnp.linalg.qr(x, mode="r"))),
+        ]
+        if n <= 512:  # the unblocked sweep and the fused interpret-mode
+            entries.append(("ggr_qr2", jax.jit(ggr_qr2)))  # schedule are slow
+            entries.append(("blocked_fused",
+                            lambda x: ggr_qr_blocked(x, schedule="fused")))
+        timings = {}
+        for name, fn in entries:
+            t, R = _time(fn, A, reps=reps, warmup=warmup)
+            R = np.abs(np.asarray(R)[:n])
+            err = float(np.abs(R - np.abs(Rnp)).max())
+            gflops = flops / t / 1e3
+            timings[name] = t
+            rows.append(f"blocked_{name}_n{n},{t:.0f},"
+                        f"gflops={gflops:.2f};maxerr={err:.1e}")
+            records.append({"name": name, "n": n, "us_per_call": t,
+                            "gflops": gflops, "maxerr": err})
+            if err > 5e-3:
+                failures.append(f"{name} n={n}: maxerr {err:.2e}")
+        speedup = timings["reference_tiles"] / timings["blocked_tree"]
+        rows.append(f"blocked_speedup_n{n},0,"
+                    f"tree_vs_reference={speedup:.2f}x")
+        records.append({"name": "speedup_tree_vs_reference", "n": n,
+                        "value": speedup})
+    out = {"bench": "bench_blocked", "check": _CHECK, "results": records}
+    path = os.path.join(os.getcwd(), "BENCH_blocked.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    rows.append(f"blocked_json,0,path={path}")
+    if _CHECK and failures:
+        sys.exit("bench_blocked --check FAILED: " + "; ".join(failures))
+    return rows
+
+
 BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels,
-           bench_scaling, bench_update, bench_serve, bench_kalman]
+           bench_scaling, bench_update, bench_serve, bench_kalman,
+           bench_blocked]
 
 
 def main() -> None:
-    wanted = sys.argv[1:]
+    global _CHECK
+    args = sys.argv[1:]
+    if "--check" in args:
+        _CHECK = True
+        args = [a for a in args if a != "--check"]
+    wanted = args
+    if _CHECK and not wanted:
+        wanted = ["bench_blocked"]
     by_name = {b.__name__: b for b in BENCHES}
     unknown = [w for w in wanted if w not in by_name]
     if unknown:
@@ -356,6 +437,8 @@ def main() -> None:
         try:
             for row in bench():
                 print(row, flush=True)
+        except SystemExit:
+            raise
         except Exception as e:  # pragma: no cover
             print(f"{bench.__name__},0,ERROR={type(e).__name__}:{e}", flush=True)
 

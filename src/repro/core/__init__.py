@@ -7,7 +7,13 @@ from .baselines import (
     mgs_qr,
     mht_qr,
 )
-from .blocked import ggr_geqrt, ggr_qr_blocked, ggr_tsqrt
+from .blocked import (
+    ggr_geqrt,
+    ggr_qr_blocked,
+    ggr_qr_blocked_reference,
+    ggr_triangularize_blocked,
+    ggr_tsqrt,
+)
 from .counts import alpha_ratio, cgr_mults, count_mults, gr_mults
 from .distributed import (
     cyclic_perm,
@@ -42,7 +48,9 @@ __all__ = [
     "ggr_geqrt",
     "ggr_qr2",
     "ggr_qr_blocked",
+    "ggr_qr_blocked_reference",
     "ggr_triangularize",
+    "ggr_triangularize_blocked",
     "ggr_tsqrt",
     "givens_qr",
     "gr_mults",

@@ -1,20 +1,45 @@
-"""Tiled/blocked GGR QR — ``dgeqrfggr`` adapted to the TPU MXU.
+"""Blocked GGR QR — ``dgeqrfggr`` as a panel pipeline over the Pallas kernels.
 
-PLASMA-style tile algorithm (the paper integrates GGR into PLASMA the same
-way; §4.1.1) with three tile kernels:
+The driver (``ggr_qr_blocked`` / ``ggr_triangularize_blocked``) is a
+right-looking panel algorithm executed by ``lax.fori_loop`` over dynamic
+frame slices, so compile time does not scale with the tile grid.  Two
+schedules share that loop:
 
-  * ``ggr_geqrt``  — factor a diagonal tile, emitting R and the explicit tile
-                     transform Qt (t x t, orthogonal) by co-updating identity.
-  * ``ggr_tsqrt``  — couple the current R tile with a tile below (stacked
-                     (b+t) x b GGR factorization) emitting the stacked Qt.
-  * trailing updates — plain GEMMs with the small explicit Qt tiles: this is
-                     where the MXU earns its keep (the TPU adaptation of the
-                     paper's "update trailing matrix using dgemm").
+``schedule="tree"`` — the MXU schedule (default on CPU hosts)
+    Per panel: every row tile of the panel is factored independently by one
+    grid-batched GEQRT Pallas launch (``kernels.batched_geqrt``, identity
+    riding along so each tile also emits its explicit b x b transform Qt);
+    the per-tile R factors are then coupled through a TSQR-style *binary
+    tree* — log2(p) rounds of batched triangular-vs-triangular couplings via
+    ``kernels.batched_update`` (the compact (b+1)-row active-set sweep),
+    replacing the old serial per-row-tile TSQRT chain — and every transform
+    is replayed onto the trailing matrix as batched GEMMs with the small Qt
+    tiles: this is where the MXU earns its keep.  The explicit-Q choice is
+    deliberate: GGR's per-column transform is Hessenberg-structured, so there
+    is no rank-b compact WY form; at tile size 64-128 an explicit Qt is
+    small, VMEM-resident, and turns every trailing update into an MXU-shaped
+    matmul.
 
-The explicit-Q choice is deliberate: GGR's per-column transform is
-Hessenberg-structured, so there is no rank-b compact WY form; at tile size
-128-256 an explicit t x t Q is small, VMEM-resident, and turns every trailing
-update into an MXU-shaped matmul.
+``schedule="fused"`` — the VMEM-residency schedule (default on TPU/GPU)
+    Per panel: one fused ``kernels.panel_qr`` GEQRT launch factors the whole
+    (F, b) panel and stores its compact (V, T) factors, then ONE
+    ``kernels.apply_panel`` grid launch replays all b transforms over the
+    entire trailing width while each width block stays VMEM-resident —
+    b-fold reuse instead of per-tile GEMMs, the paper's merged
+    UPDATE_ROW1/UPDATE schedule at panel granularity.
+
+Both schedules share the *frame trick*: panel k operates on a dynamic row
+slice starting at its first pivot row, so in-frame pivots are always rows
+0..b-1 — static, which is what lets one compiled panel body serve every loop
+iteration.  Frames shrink by halves across O(log) phases as rows finalize,
+and ``kernels.pad_to_tile`` rounds arbitrary (m, n) up to the tile grid
+(zero rows/cols are exact fixed points of the eps-guarded sweeps), so there
+is no ``m % tile == 0`` restriction.
+
+``ggr_geqrt`` / ``ggr_tsqrt`` are the original explicit-Q tile primitives
+(still used by ``core.distributed`` and the Orthant optimizer), and
+``ggr_qr_blocked_reference`` is the previous Python-unrolled driver with its
+serial TSQRT chain — kept as the baseline ``bench_blocked`` measures against.
 """
 from __future__ import annotations
 
@@ -22,10 +47,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.ggr_apply import apply_factors_pallas
+from repro.kernels.ggr_panel import batched_geqrt_pallas, panel_factor_pallas
+from repro.kernels.ggr_update import batched_update_pallas, pad_to_tile
 
 from .ggr import apply_ggr_factors, ggr_column_step_at, ggr_factor_column
 
-__all__ = ["ggr_geqrt", "ggr_tsqrt", "ggr_qr_blocked"]
+__all__ = [
+    "ggr_geqrt",
+    "ggr_tsqrt",
+    "ggr_qr_blocked",
+    "ggr_qr_blocked_reference",
+    "ggr_triangularize_blocked",
+]
 
 
 def ggr_geqrt(tile: jax.Array):
@@ -59,8 +96,13 @@ def ggr_tsqrt(R_top: jax.Array, B: jax.Array):
 
 
 @functools.partial(jax.jit, static_argnames=("tile",))
-def ggr_qr_blocked(A: jax.Array, tile: int = 128) -> jax.Array:
-    """Blocked GGR QR over a (p x q) tile grid; trailing updates are GEMMs."""
+def ggr_qr_blocked_reference(A: jax.Array, tile: int = 128) -> jax.Array:
+    """The previous blocked driver: Python-unrolled (p x q) tile loops with a
+    serial per-row-tile TSQRT chain and one small GEMM per (i, j) tile.
+
+    Kept as the wall-clock baseline for ``bench_blocked`` and as a compact
+    executable statement of the PLASMA-style tile algorithm (§4.1.1).
+    """
     m, n = A.shape
     assert m % tile == 0 and n % tile == 0, "pad to tile multiples first"
     p, q = m // tile, n // tile
@@ -93,4 +135,213 @@ def ggr_qr_blocked(A: jax.Array, tile: int = 128) -> jax.Array:
                 upd = Qt2 @ stacked  # (2t x 2t) @ (2t x t) on the MXU
                 R = put(R, upd[:t], k, j)
                 R = put(R, upd[t:], i, j)
+    return jnp.triu(R)
+
+
+# ---------------------------------------------------------------------------
+# The panel pipeline
+# ---------------------------------------------------------------------------
+def _tree_levels(p: int):
+    """Static binary-tree pairing over p row tiles: [(ai, bi), ...] per round.
+
+    Round r couples nodes ``ai[j]`` (survivor, receives the coupled R) with
+    ``bi[j]``; node 0 — the tile holding the pivot rows — survives every
+    round, so the final panel R lands in tile 0.  Odd leftovers propagate to
+    the next round: log2(p) depth instead of the serial chain's p - 1.
+    """
+    levels = []
+    nodes = list(range(p))
+    while len(nodes) > 1:
+        pairs = list(zip(nodes[0::2], nodes[1::2]))
+        levels.append((np.asarray([a for a, _ in pairs]),
+                       np.asarray([b for _, b in pairs])))
+        nodes = sorted([a for a, _ in pairs]
+                       + (nodes[-1:] if len(nodes) % 2 else []))
+    return levels
+
+
+def _phase_schedule(m: int, b: int, nk: int):
+    """[(k_start, k_end, F)]: frame heights shrink by halves as rows finalize.
+
+    Panel k only involves rows >= k*b; a single static frame tall enough for
+    panel 0 would waste ~2x on the later panels, so the fori_loop is split
+    into O(log) phases whose static frame height F halves once the active
+    height fits in F/2.  F is always a tile multiple and at least 2b.
+    """
+    phases = []
+    F = -(-max(m, b) // b) * b
+    k = 0
+    while k < nk:
+        if F <= 2 * b:
+            k_end = nk
+        else:
+            k_end = min(nk, max(k + 1, -(-(m - F // 2) // b)))
+        phases.append((k, k_end, F))
+        k = k_end
+        F = max(2 * b, -(-(F // 2) // b) * b)
+    return phases
+
+
+def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
+    """One tree-scheduled panel: batched tile GEQRT -> log-depth coupling ->
+    GEMM trailing updates, all on the (F, W) frame starting at the pivot row."""
+    p = F // b
+    dtype = Xp.dtype
+    eye = jnp.eye(b, dtype=dtype)
+    c0 = k * b
+    frame = jax.lax.dynamic_slice(Xp, (c0, 0), (F, W))
+    pan = jax.lax.dynamic_slice(frame, (0, c0), (F, b)).reshape(p, b, b)
+
+    # level 0: factor every row tile independently, identity riding -> Qt_i
+    tiles = jnp.concatenate([pan, jnp.broadcast_to(eye, (p, b, b))], axis=2)
+    out0 = batched_geqrt_pallas(tiles, n_pivots=b,
+                                block_b=block_b or p, interpret=interpret)
+    R = out0[:, :, :b]
+    C = jnp.einsum("pij,pjw->piw", out0[:, :, b:], frame.reshape(p, b, W))
+
+    # binary-tree coupling of the per-tile R factors (log2(p) rounds);
+    # each round is ONE batched compact-active-set sweep + ONE batched GEMM
+    for ai, bi in _tree_levels(p):
+        npair = len(ai)
+        E = jnp.broadcast_to(eye, (npair, b, b))
+        Z = jnp.zeros((npair, b, b), dtype)
+        stacked = jnp.concatenate(
+            [jnp.concatenate([R[ai], E, Z], axis=2),
+             jnp.concatenate([R[bi], Z, E], axis=2)], axis=1)
+        out = batched_update_pallas(stacked, n_pivots=b,
+                                    block_b=block_b or npair,
+                                    interpret=interpret)
+        R = R.at[ai].set(out[:, :b, :b])
+        Qt = out[:, :, b:]  # (npair, 2b, 2b) node transform
+        Ct = jnp.concatenate([C[ai], C[bi]], axis=1)
+        Ct = jnp.einsum("pij,pjw->piw", Qt, Ct)
+        C = C.at[ai].set(Ct[:, :b]).at[bi].set(Ct[:, b:])
+
+    frame = C.reshape(F, W)
+    # exact panel-column write: [R; 0] (keeps finalized columns exactly zero
+    # below their pivots, which is what makes later frames' GEMMs exact
+    # no-ops on them)
+    Rpan = jnp.concatenate([jnp.triu(R[0]), jnp.zeros((F - b, b), dtype)], axis=0)
+    frame = jax.lax.dynamic_update_slice(frame, Rpan, (0, c0))
+    return jax.lax.dynamic_update_slice(Xp, frame, (c0, 0))
+
+
+def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret):
+    """One fused-scheduled panel: monolithic GEQRT kernel + one full-width
+    DET2-grid apply launch (V/T resident across the width grid)."""
+    c0 = k * b
+    frame = jax.lax.dynamic_slice(Xp, (c0, 0), (F, W))
+    pan = jax.lax.dynamic_slice(frame, (0, c0), (F, b))
+    Rp, V, T = panel_factor_pallas(pan, pivot0=0, interpret=interpret)
+
+    bw = W if block_w is None else max(1, min(block_w, W))
+    while W % bw:
+        bw //= 2
+
+    def apply(fr):
+        return apply_factors_pallas(V, T, fr, pivot0=0, block_w=bw,
+                                    interpret=interpret)
+
+    if pure_qr:
+        # last panel of a pure QR has no trailing columns to update
+        frame = jax.lax.cond(k < nk - 1, apply, lambda fr: fr, frame)
+    else:
+        frame = apply(frame)
+    frame = jax.lax.dynamic_update_slice(frame, Rp, (0, c0))
+    return jax.lax.dynamic_update_slice(Xp, frame, (c0, 0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_pivots", "tile", "schedule", "interpret",
+                     "block_w", "block_b"),
+)
+def _triangularize_blocked_impl(X, n_pivots, tile, schedule, interpret,
+                                block_w, block_b):
+    m, w = X.shape
+    b = min(tile, -(-n_pivots // 8) * 8)
+    np_pad = -(-n_pivots // b) * b
+    nk = np_pad // b
+
+    # pad the pivot block up to a tile multiple (zero columns between the
+    # pivots and any trailing rhs columns — exact no-op sweeps)
+    if np_pad != n_pivots:
+        if n_pivots == w:
+            X = pad_to_tile(X, (b,), axes=(1,))
+        else:
+            X = jnp.concatenate(
+                [X[:, :n_pivots],
+                 jnp.zeros((m, np_pad - n_pivots), X.dtype),
+                 X[:, n_pivots:]], axis=1)
+    W = X.shape[1]
+
+    phases = _phase_schedule(m, b, nk)
+    # rows: frames slide down b per panel, so the tail needs zero rows out to
+    # the last frame's bottom edge (zero rows are exact sweep fixed points)
+    total = max(F + (e - 1) * b for (_, e, F) in phases)
+    Xp = jnp.pad(X, ((0, total - m), (0, 0)))
+
+    pure_qr = W == np_pad
+    for s, e, F in phases:
+        if schedule == "tree":
+            body = functools.partial(_panel_step_tree, b=b, F=F, W=W,
+                                     block_b=block_b, interpret=interpret)
+        else:
+            body = functools.partial(_panel_step_fused, b=b, F=F, W=W, nk=nk,
+                                     pure_qr=pure_qr, block_w=block_w,
+                                     interpret=interpret)
+        Xp = jax.lax.fori_loop(s, e, lambda k, Xc: body(Xc, k), Xp)
+
+    out = Xp[:m]
+    if np_pad != n_pivots:
+        out = jnp.concatenate([out[:, :n_pivots], out[:, np_pad:]], axis=1)
+    return out
+
+
+def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
+                              tile: int = 64, schedule: str = "auto",
+                              interpret: bool | None = None,
+                              block_w: int | None = None,
+                              block_b: int | None = None) -> jax.Array:
+    """Blocked GGR sweeps annihilating columns 0..n_pivots-1 below their
+    diagonals; trailing columns (rhs) ride along as ``Q^T``-transformed data.
+
+    The blocked sibling of ``core.ggr.ggr_triangularize``: same semantics,
+    panel-pipeline execution (see module docstring).  Accepts arbitrary
+    (m, w) — tile padding is internal.
+
+    schedule: ``"tree"`` (batched tile GEQRT + log-depth coupling + GEMM
+    trailing — the MXU schedule), ``"fused"`` (monolithic panel kernel + one
+    full-width DET2 apply launch — the VMEM-residency schedule), or
+    ``"auto"``: tree on interpret/CPU backends, fused where Mosaic compiles.
+    """
+    m, w = X.shape
+    if n_pivots is None:
+        n_pivots = min(m, w)
+    if not 0 < n_pivots <= w:
+        raise ValueError(f"n_pivots {n_pivots} out of range for width {w}")
+    if schedule not in ("auto", "tree", "fused"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    itp = resolve_interpret(interpret)
+    sched = schedule if schedule != "auto" else ("tree" if itp else "fused")
+    return _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
+                                       block_w, block_b)
+
+
+def ggr_qr_blocked(A: jax.Array, tile: int = 64, schedule: str = "auto",
+                   interpret: bool | None = None,
+                   block_w: int | None = None,
+                   block_b: int | None = None) -> jax.Array:
+    """Blocked GGR QR of an arbitrary (m, n) matrix; returns the (m, n) R.
+
+    Panel pipeline over the Pallas GEQRT/DET2 kernels with tree-coupled row
+    tiles — see the module docstring for the two schedules.  Unlike the
+    reference driver there is no ``m % tile == 0`` restriction.
+    """
+    m, n = A.shape
+    if min(m, n) == 0:
+        return jnp.triu(A)
+    R = ggr_triangularize_blocked(A, min(m, n), tile=tile, schedule=schedule,
+                                  interpret=interpret, block_w=block_w,
+                                  block_b=block_b)
     return jnp.triu(R)

@@ -1,17 +1,21 @@
 """Pallas TPU kernels for GGR hot spots (validated in interpret mode on CPU).
 
 kernels:
+  backend    — shared interpret-mode policy (CPU interprets, TPU/GPU compile)
   ggr_panel  — fused GEQRT panel factorization (VMEM-resident, merged
-               UPDATE_ROW1/UPDATE schedule — the paper's RDP co-design)
+               UPDATE_ROW1/UPDATE schedule — the paper's RDP co-design) plus
+               the grid-batched dense GEQRT tile sweep the blocked driver uses
   ggr_apply  — fused DET2-grid trailing update with b-fold VMEM reuse
   ggr_update — batched row-append/augmented update sweeps (grid over batch;
-               the streaming-solver hot loop)
+               the streaming-solver hot loop) + the pad_batch / pad_to_tile
+               padding primitives
   ops        — jit'd public wrappers incl. the full-QR Pallas driver
   ref        — pure-jnp oracles
 """
-from .ggr_update import pad_batch
+from .ggr_update import pad_batch, pad_to_tile
 from .ops import (
     apply_panel,
+    batched_geqrt,
     batched_update,
     default_interpret,
     ggr_qr_pallas,
@@ -21,10 +25,12 @@ from .ops import (
 
 __all__ = [
     "apply_panel",
+    "batched_geqrt",
     "batched_update",
     "default_interpret",
     "ggr_qr_pallas",
     "pad_batch",
+    "pad_to_tile",
     "panel_qr",
     "tsqrt",
 ]

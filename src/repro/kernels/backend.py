@@ -1,0 +1,39 @@
+"""Backend autodetection for the Pallas kernels.
+
+One shared policy for every kernel module (``ggr_panel``, ``ggr_apply``,
+``ggr_update``, ``ops``): run the kernels in interpret mode (kernel bodies
+execute as plain XLA ops — the validation mode, and the only mode that works
+on CPU hosts) exactly when the default JAX backend is CPU.  Real TPU/GPU
+backends compile the kernels by default.
+
+Override with ``REPRO_PALLAS_INTERPRET=0/1`` (useful to force-interpret on a
+device host while debugging, or to assert compilation in CI).
+
+``resolve_interpret`` is the helper the public kernel wrappers call on their
+``interpret: bool | None`` argument *before* entering their jitted cores, so
+the resolved value — never ``None`` — is the jit cache key.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """True iff Pallas kernels should run in interpret mode by default.
+
+    Interpret mode only when the default backend is CPU; TPU and GPU
+    backends compile the kernels.  ``REPRO_PALLAS_INTERPRET`` overrides.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a tri-state ``interpret`` argument against the backend default."""
+    return default_interpret() if interpret is None else bool(interpret)

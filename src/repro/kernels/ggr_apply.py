@@ -19,12 +19,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
 from .ggr_panel import _EPS, _revcumsum
 
 __all__ = ["apply_factors_pallas"]
 
 
-def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int):
+def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool):
     V = v_ref[...]
     T = t_ref[...]
     C = c_ref[...]
@@ -33,13 +34,17 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int):
     cols = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
 
     def body(c, C):
-        onehot = (cols == c).astype(C.dtype)
-        v = V @ onehot  # (m,) one-hot extract
-        t = T @ onehot
+        if native:
+            v = jax.lax.dynamic_slice_in_dim(V, c, 1, axis=1)[:, 0]
+            t = jax.lax.dynamic_slice_in_dim(T, c, 1, axis=1)[:, 0]
+        else:
+            onehot = (cols == c).astype(C.dtype)
+            v = V @ onehot  # (m,) one-hot extract
+            t = T @ onehot
         pivot = pivot0 + c
 
         prod = v[:, None] * C
-        P = _revcumsum(prod)  # inclusive suffix sum
+        P = _revcumsum(prod, native=native)  # inclusive suffix sum
         # exclusive suffix via shift (P - prod would cancel catastrophically)
         S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
 
@@ -50,9 +55,14 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int):
         k = v / (safe_t * safe_tn)
         l = safe_tn / safe_t
 
-        piv_onehot = (rows == pivot).astype(C.dtype)
-        t_piv = (t * piv_onehot).sum()
-        pivot_new = (piv_onehot @ P) / jnp.where(t_piv > _EPS, t_piv, 1.0)
+        if native:
+            t_piv = jax.lax.dynamic_slice_in_dim(t, pivot, 1, axis=0)[0]
+            P_piv = jax.lax.dynamic_slice_in_dim(P, pivot, 1, axis=0)[0]
+        else:
+            piv_onehot = (rows == pivot).astype(C.dtype)
+            t_piv = (t * piv_onehot).sum()
+            P_piv = piv_onehot @ P
+        pivot_new = P_piv / jnp.where(t_piv > _EPS, t_piv, 1.0)
 
         det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * C[:-1, :]
         det2 = jnp.where(valid[:-1, None], det2, C[1:, :])
@@ -69,20 +79,13 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int):
 
 
 @functools.partial(jax.jit, static_argnames=("pivot0", "block_w", "interpret"))
-def apply_factors_pallas(
-    V: jax.Array,
-    T: jax.Array,
-    C: jax.Array,
-    pivot0: int = 0,
-    block_w: int = 256,
-    interpret: bool = True,
-):
-    """Apply b stored GGR transforms to trailing columns C ((m, w))."""
+def _apply_factors_call(V: jax.Array, T: jax.Array, C: jax.Array,
+                        pivot0: int, block_w: int, interpret: bool):
     m, b = V.shape
     w = C.shape[1]
     bw = min(block_w, w)
     assert w % bw == 0, "pad trailing width to the block multiple"
-    kern = functools.partial(_apply_kernel, pivot0=pivot0)
+    kern = functools.partial(_apply_kernel, pivot0=pivot0, native=interpret)
     return pl.pallas_call(
         kern,
         grid=(w // bw,),
@@ -95,3 +98,19 @@ def apply_factors_pallas(
         out_specs=pl.BlockSpec((m, bw), lambda j: (0, j)),
         interpret=interpret,
     )(V, T, C)
+
+
+def apply_factors_pallas(
+    V: jax.Array,
+    T: jax.Array,
+    C: jax.Array,
+    pivot0: int = 0,
+    block_w: int = 256,
+    interpret: bool | None = None,
+):
+    """Apply b stored GGR transforms to trailing columns C ((m, w)).
+
+    ``interpret=None`` resolves via ``backend.default_interpret()``.
+    """
+    return _apply_factors_call(V, T, C, pivot0, block_w,
+                               resolve_interpret(interpret))

@@ -1,4 +1,4 @@
-"""Pallas GEQRT kernel: fused GGR panel factorization, VMEM-resident.
+"""Pallas GEQRT kernels: fused GGR panel factorization, VMEM-resident.
 
 TPU co-design notes (the paper's RDP mapping, §4.2 / fig. 12):
 
@@ -8,12 +8,26 @@ TPU co-design notes (the paper's RDP mapping, §4.2 / fig. 12):
   computed in ONE pass, i.e. the paper's merged UPDATE_ROW1/UPDATE schedule —
   no HBM round-trip between the 2-norm, k/l-vector and trailing updates;
 * column extraction / write-back use one-hot contractions (MXU-friendly,
-  avoids dynamic lane slicing which Mosaic restricts);
-* the reverse cumulative sums use log2(m) shift-add doubling steps — only
-  static slices, pads and adds, all trivially Mosaic-lowerable.
+  avoids dynamic lane slicing which Mosaic restricts) on the compiled path;
+  the interpret path (``native=True``) uses dynamic slices, which XLA:CPU
+  handles far better than full-width one-hot contractions;
+* the reverse cumulative sums use log2(m) shift-add doubling steps on the
+  compiled path — only static pads, slices and adds, all trivially
+  Mosaic-lowerable — and ``lax.associative_scan`` on the interpret path.
 
-The kernel emits (R, V, T): the factored panel plus the compact GGR factors
-consumed by ``ggr_apply`` for trailing updates.
+Two kernels:
+
+``panel_factor_pallas``
+    (R, V, T) for one (m, b) panel: the factored panel plus the compact GGR
+    factors consumed by ``ggr_apply`` for trailing updates.
+
+``batched_geqrt_pallas``
+    Grid-batched dense GEQRT sweeps: a (B, t, w) batch of independent tiles,
+    each triangularized in its first ``n_pivots`` columns while the remaining
+    ``w - n_pivots`` columns ride along through the DET2 grids.  Riding an
+    identity block turns each output into the tile's explicit transform Qt —
+    the building block of the blocked driver's MXU schedule, where trailing
+    updates are plain GEMMs with those small Qt tiles.
 """
 from __future__ import annotations
 
@@ -23,30 +37,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["panel_factor_pallas"]
+from .backend import resolve_interpret
+
+__all__ = ["panel_factor_pallas", "batched_geqrt_pallas"]
 
 _EPS = 1e-30
 
 
-def _revcumsum(x: jax.Array, axis: int = 0) -> jax.Array:
-    """Reverse cumsum along ``axis`` via doubling (log2 m shift-adds)."""
+def _revcumsum(x: jax.Array, axis: int = 0, native: bool = False) -> jax.Array:
+    """Reverse cumulative sum along ``axis``.
+
+    ``native=False`` (the Mosaic-lowerable path): log2(m) shift-add doubling
+    steps built from static ``lax.slice_in_dim`` + ``lax.pad`` — no
+    concatenate, so each step is one pad and one add rather than a fresh
+    two-operand buffer assembly.  ``native=True`` (interpret mode):
+    ``lax.associative_scan``, which XLA:CPU executes several times faster
+    than either the doubling ladder or ``lax.cumsum``.
+    """
+    if native:
+        return jax.lax.associative_scan(jnp.add, x, axis=axis, reverse=True)
     m = x.shape[axis]
+    zero = jnp.asarray(0, x.dtype)
     d = 1
     while d < m:
-        # x[i] += x[i + d]  (zero beyond the end)
-        tail = [slice(None)] * x.ndim
-        tail[axis] = slice(d, None)
-        pad_shape = list(x.shape)
-        pad_shape[axis] = d
-        shifted = jnp.concatenate(
-            [x[tuple(tail)], jnp.zeros(pad_shape, x.dtype)], axis=axis
-        )
-        x = x + shifted
+        # x[i] += x[i + d]  (zero beyond the end) — pad-after replaces the
+        # old concatenate-with-zeros, avoiding the extra buffer assembly
+        pads = [(0, 0, 0)] * x.ndim
+        pads[axis] = (0, d, 0)
+        x = x + jax.lax.pad(jax.lax.slice_in_dim(x, d, m, axis=axis), zero, pads)
         d *= 2
     return x
 
 
-def _ggr_column_update(X, col_onehot, pivot_row, rows):
+def _ggr_column_update(X, col_onehot, pivot_row, rows, native=False):
     """One fused GGR column step on X (m, n); returns updated X and (v, t).
 
     The column is scaled by its max-abs before the norm/coefficient math
@@ -59,11 +82,11 @@ def _ggr_column_update(X, col_onehot, pivot_row, rows):
     v = jnp.where(rows >= pivot_row, col, 0.0)
     sigma = jnp.max(jnp.abs(v))
     v = v / jnp.where(sigma > 0, sigma, 1.0)
-    t2 = _revcumsum((v * v)[:, None])[:, 0]
+    t2 = _revcumsum((v * v)[:, None], native=native)[:, 0]
     t = jnp.sqrt(t2)
 
     prod = v[:, None] * X
-    P = _revcumsum(prod)  # P_i = sum_{r>=i} (inclusive)
+    P = _revcumsum(prod, native=native)  # P_i = sum_{r>=i} (inclusive)
     # exclusive suffix via shift (P - prod would cancel catastrophically)
     S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
 
@@ -93,7 +116,7 @@ def _ggr_column_update(X, col_onehot, pivot_row, rows):
     return out, v, t, do_any, sigma
 
 
-def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int):
+def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int, native: bool):
     X = a_ref[...]
     m, b = X.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
@@ -102,7 +125,9 @@ def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int):
     def body(c, carry):
         X, V, T = carry
         onehot = (cols == c).astype(X.dtype)
-        Xn, v, t, do_any, sigma = _ggr_column_update(X, onehot, pivot0 + c, rows)
+        Xn, v, t, do_any, sigma = _ggr_column_update(
+            X, onehot, pivot0 + c, rows, native=native
+        )
         # write the annihilated column exactly: sigma·t[pivot] at pivot, 0 below
         tp = sigma * (t * (rows == pivot0 + c)).sum()
         newcol = jnp.where(rows == pivot0 + c, tp, jnp.where(rows < pivot0 + c, Xn @ onehot, 0.0))
@@ -121,10 +146,9 @@ def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int):
 
 
 @functools.partial(jax.jit, static_argnames=("pivot0", "interpret"))
-def panel_factor_pallas(panel: jax.Array, pivot0: int = 0, interpret: bool = True):
-    """Factor an (m, b) panel in one fused VMEM-resident Pallas kernel."""
+def _panel_factor_call(panel: jax.Array, pivot0: int, interpret: bool):
     m, b = panel.shape
-    kern = functools.partial(_panel_kernel, pivot0=pivot0)
+    kern = functools.partial(_panel_kernel, pivot0=pivot0, native=interpret)
     out_shapes = (
         jax.ShapeDtypeStruct((m, b), panel.dtype),
         jax.ShapeDtypeStruct((m, b), panel.dtype),
@@ -141,3 +165,120 @@ def panel_factor_pallas(panel: jax.Array, pivot0: int = 0, interpret: bool = Tru
         ),
         interpret=interpret,
     )(panel)
+
+
+def panel_factor_pallas(panel: jax.Array, pivot0: int = 0,
+                        interpret: bool | None = None):
+    """Factor an (m, b) panel in one fused VMEM-resident Pallas kernel.
+
+    ``interpret=None`` resolves via ``backend.default_interpret()`` — True
+    only on CPU hosts, so TPU/GPU backends compile the Mosaic kernel.
+    """
+    return _panel_factor_call(panel, pivot0, resolve_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Batched dense GEQRT sweeps (the blocked driver's tile kernel)
+# ---------------------------------------------------------------------------
+def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
+    X = x_ref[...]  # (bb, t, w) — this grid step's tiles
+    bb, t, w = X.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
+
+    def body(c, X):
+        if native:
+            v = jax.lax.dynamic_slice_in_dim(X, c, 1, axis=2)[..., 0]  # (bb, t)
+        else:
+            oh = (cols == c).astype(X.dtype)
+            v = jnp.einsum("btw,w->bt", X, oh)
+        v = jnp.where(rows[None, :] >= c, v, 0.0)
+        sigma = jnp.max(jnp.abs(v), axis=1, keepdims=True)  # safe-Givens scale
+        vs = v / jnp.where(sigma > 0, sigma, 1.0)
+        ts = jnp.sqrt(_revcumsum(vs * vs, axis=1, native=native))
+
+        prod = vs[:, :, None] * X
+        P = _revcumsum(prod, axis=1, native=native)  # inclusive suffix dots
+        # exclusive suffix via shift (P - prod cancels catastrophically)
+        S = jnp.concatenate([P[:, 1:], jnp.zeros_like(P[:, :1])], axis=1)
+
+        tn = jnp.concatenate([ts[:, 1:], jnp.zeros_like(ts[:, :1])], axis=1)
+        valid = tn > _EPS
+        st = jnp.where(ts > _EPS, ts, 1.0)
+        stn = jnp.where(valid, tn, 1.0)
+        k = vs / (st * stn)
+        l = stn / st
+
+        if native:
+            t_piv = jax.lax.dynamic_slice_in_dim(ts, c, 1, axis=1)[:, 0]
+            P_piv = jax.lax.dynamic_slice_in_dim(P, c, 1, axis=1)[:, 0]
+        else:
+            piv = (rows == c).astype(X.dtype)
+            t_piv = ts @ piv
+            P_piv = jnp.einsum("r,brw->bw", piv, P)
+        do_any = t_piv > _EPS
+        pivot_new = P_piv / jnp.where(do_any, t_piv, 1.0)[:, None]
+
+        det2 = k[:, :-1, None] * S[:, :-1] - l[:, :-1, None] * X[:, :-1]
+        det2 = jnp.where(valid[:, :-1, None], det2, X[:, 1:])
+        cand_below = jnp.concatenate([X[:, :1], det2], axis=1)
+
+        rr = rows[None, :, None]
+        out = jnp.where(rr < c, X, jnp.where(rr == c, pivot_new[:, None, :], cand_below))
+        out = jnp.where(do_any[:, None, None], out, X)
+
+        # annihilated column written exactly: sigma·t at the pivot, 0 below
+        if native:
+            oldcol = jax.lax.dynamic_slice_in_dim(out, c, 1, axis=2)[..., 0]
+        else:
+            oldcol = jnp.einsum("btw,w->bt", out, oh)
+        newcol = jnp.where(rows[None, :] == c, (sigma[:, 0] * t_piv)[:, None],
+                           jnp.where(rows[None, :] < c, oldcol, 0.0))
+        newcol = jnp.where(do_any[:, None], newcol, oldcol)
+        if native:
+            out = jax.lax.dynamic_update_slice_in_dim(out, newcol[..., None], c, axis=2)
+        else:
+            out = out * (1.0 - oh) + newcol[:, :, None] * oh
+        return out
+
+    o_ref[...] = jax.lax.fori_loop(0, n_pivots, body, X)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pivots", "block_b", "interpret"))
+def _batched_geqrt_call(tiles: jax.Array, n_pivots: int, block_b: int,
+                        interpret: bool):
+    from .ggr_update import pad_batch  # deferred: sibling-module edge
+
+    B, t, w = tiles.shape
+    bb = min(block_b, B)
+    padded = pad_batch(tiles, bb)
+    Bpad = padded.shape[0]
+    kern = functools.partial(_batched_geqrt_kernel, n_pivots=n_pivots,
+                             native=interpret)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bpad // bb,),
+        out_shape=jax.ShapeDtypeStruct((Bpad, t, w), tiles.dtype),
+        in_specs=[pl.BlockSpec((bb, t, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb, t, w), lambda i: (i, 0, 0)),
+        interpret=interpret,
+    )(padded)
+    return out[:B]
+
+
+def batched_geqrt_pallas(tiles: jax.Array, n_pivots: int, block_b: int = 8,
+                         interpret: bool | None = None):
+    """Dense GEQRT sweep of a (B, t, w) tile batch, one fused launch.
+
+    Each tile's first ``n_pivots`` columns are triangularized (pivot row c for
+    column c); columns >= ``n_pivots`` ride along through the DET2 grids.
+    Riding an identity block yields the explicit tile transform: for
+    ``tiles = [T | I]`` the output is ``[R | Qt]`` with ``Qt @ T = R`` and
+    ``Qt`` orthogonal.  ``block_b`` tiles are VMEM-resident per grid step;
+    non-multiple batches are zero-padded (``pad_batch``) and sliced back.
+    All-zero tiles are exact fixed points (every divisor is eps-guarded), so
+    padding tiles — and the zero row-tiles of a taller-than-the-matrix frame —
+    come back bit-identical with ``Qt = I``.
+    """
+    return _batched_geqrt_call(tiles, n_pivots, block_b,
+                               resolve_interpret(interpret))

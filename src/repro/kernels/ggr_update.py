@@ -38,9 +38,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
 from .ggr_panel import _EPS, _revcumsum
 
-__all__ = ["batched_update_pallas", "pad_batch"]
+__all__ = ["batched_update_pallas", "pad_batch", "pad_to_tile"]
 
 
 def pad_batch(x: jax.Array, multiple: int) -> jax.Array:
@@ -55,15 +56,39 @@ def pad_batch(x: jax.Array, multiple: int) -> jax.Array:
     """
     if multiple <= 0:
         raise ValueError(f"pad multiple must be positive, got {multiple}")
-    B = x.shape[0]
-    Bpad = -(-B // multiple) * multiple
-    if Bpad == B:
+    return pad_to_tile(x, (multiple,), axes=(0,))
+
+
+def pad_to_tile(x: jax.Array, tiles, axes=None) -> jax.Array:
+    """Zero-pad ``x`` so the given axes become multiples of the given tiles.
+
+    The general-rank sibling of ``pad_batch`` (which pads dim 0 only):
+    ``tiles`` is an int or a sequence of ints, ``axes`` the matching axis
+    indices (default: the last ``len(tiles)`` axes).  The blocked QR driver
+    uses it to round row/column extents up to the tile grid, which is what
+    lets it accept arbitrary (m, n) instead of asserting ``m % tile == 0``:
+    zero rows/columns are exact fixed points of every eps-guarded GGR sweep,
+    so callers simply slice the padding back off.
+    """
+    if isinstance(tiles, int):
+        tiles = (tiles,)
+    tiles = tuple(int(t) for t in tiles)
+    if axes is None:
+        axes = tuple(range(x.ndim - len(tiles), x.ndim))
+    axes = tuple(int(a) % x.ndim for a in axes)
+    if len(axes) != len(tiles):
+        raise ValueError(f"{len(tiles)} tiles for {len(axes)} axes")
+    if any(t <= 0 for t in tiles):
+        raise ValueError(f"pad tiles must be positive, got {tiles}")
+    widths = [(0, 0)] * x.ndim
+    for a, t in zip(axes, tiles):
+        widths[a] = (0, -(-x.shape[a] // t) * t - x.shape[a])
+    if all(w == (0, 0) for w in widths):
         return x
-    widths = [(0, Bpad - B)] + [(0, 0)] * (x.ndim - 1)
     return jnp.pad(x, widths)
 
 
-def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int):
+def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False):
     X = x_ref[...]  # (bb, n_top + p, w) — this grid step's stacked problems
     bb, m, w = X.shape
     n_top = n_pivots
@@ -73,18 +98,24 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int):
 
     def body(c, carry):
         Xt, Xu = carry
-        piv = (rows_t == c).astype(X.dtype)
-        r_row = jnp.einsum("r,brw->bw", piv, Xt)  # one-hot extract row c
+        if native:
+            r_row = jax.lax.dynamic_slice_in_dim(Xt, c, 1, axis=1)[:, 0]
+        else:
+            piv = (rows_t == c).astype(X.dtype)
+            r_row = jnp.einsum("r,brw->bw", piv, Xt)  # one-hot extract row c
         A = jnp.concatenate([r_row[:, None, :], Xu], axis=1)  # (bb, p+1, w)
 
-        onehot = (cols == c).astype(X.dtype)
-        v = A @ onehot  # (bb, p+1) — active column: [R_cc; U[:, c]]
+        if native:
+            v = jax.lax.dynamic_slice_in_dim(A, c, 1, axis=2)[..., 0]
+        else:
+            onehot = (cols == c).astype(X.dtype)
+            v = A @ onehot  # (bb, p+1) — active column: [R_cc; U[:, c]]
         sigma = jnp.max(jnp.abs(v), axis=1, keepdims=True)  # safe-Givens scale
         v = v / jnp.where(sigma > 0, sigma, 1.0)
-        t = jnp.sqrt(_revcumsum((v * v)[..., None], axis=1)[..., 0])
+        t = jnp.sqrt(_revcumsum(v * v, axis=1, native=native))
 
         prod = v[..., None] * A
-        P = _revcumsum(prod, axis=1)  # inclusive suffix dots
+        P = _revcumsum(prod, axis=1, native=native)  # inclusive suffix dots
         # exclusive suffix via shift (P - prod cancels catastrophically)
         S = jnp.concatenate([P[:, 1:], jnp.zeros_like(P[:, :1])], axis=1)
 
@@ -107,10 +138,18 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int):
             [(sigma * t_piv[:, None]), jnp.zeros((bb, A.shape[1] - 1), X.dtype)],
             axis=1,
         )
-        A_new = A_new * (1.0 - onehot) + newcol[..., None] * onehot
-        A_new = jnp.where(do_any[:, None, None], A_new, A)
-
-        Xt = Xt * (1.0 - piv)[None, :, None] + piv[None, :, None] * A_new[:, :1, :]
+        if native:
+            A_new = jax.lax.dynamic_update_slice_in_dim(
+                A_new, newcol[..., None], c, axis=2
+            )
+            A_new = jnp.where(do_any[:, None, None], A_new, A)
+            Xt = jax.lax.dynamic_update_slice_in_dim(
+                Xt, A_new[:, :1, :], c, axis=1
+            )
+        else:
+            A_new = A_new * (1.0 - onehot) + newcol[..., None] * onehot
+            A_new = jnp.where(do_any[:, None, None], A_new, A)
+            Xt = Xt * (1.0 - piv)[None, :, None] + piv[None, :, None] * A_new[:, :1, :]
         return Xt, A_new[:, 1:, :]
 
     Xt, Xu = jax.lax.fori_loop(0, n_pivots, body, (Xt, Xu))
@@ -118,8 +157,8 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int):
 
 
 @functools.partial(jax.jit, static_argnames=("n_pivots", "block_b", "interpret"))
-def batched_update_pallas(stacked: jax.Array, n_pivots: int,
-                          block_b: int = 8, interpret: bool = True):
+def _batched_update_call(stacked: jax.Array, n_pivots: int,
+                         block_b: int, interpret: bool):
     """Triangularize the first ``n_pivots`` columns of each stacked problem.
 
     stacked: (B, n_pivots + p, w) batch of ``[R | d; U | Y]`` matrices, R
@@ -138,7 +177,8 @@ def batched_update_pallas(stacked: jax.Array, n_pivots: int,
     bb = min(block_b, B)
     padded = pad_batch(stacked, bb)
     Bpad = padded.shape[0]
-    kern = functools.partial(_batched_update_kernel, n_pivots=n_pivots)
+    kern = functools.partial(_batched_update_kernel, n_pivots=n_pivots,
+                             native=interpret)
     out = pl.pallas_call(
         kern,
         grid=(Bpad // bb,),
@@ -148,3 +188,15 @@ def batched_update_pallas(stacked: jax.Array, n_pivots: int,
         interpret=interpret,
     )(padded)
     return out[:B]
+
+
+def batched_update_pallas(stacked: jax.Array, n_pivots: int,
+                          block_b: int = 8, interpret: bool | None = None):
+    """Batched row-append sweep; see ``_batched_update_call`` for semantics.
+
+    ``interpret=None`` resolves via ``backend.default_interpret()`` (True only
+    on CPU hosts) before entering the jitted core, so the resolved value —
+    never ``None`` — is the jit cache key.
+    """
+    return _batched_update_call(stacked, n_pivots, block_b,
+                                resolve_interpret(interpret))

@@ -1,48 +1,55 @@
 """Public jit'd wrappers over the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (kernel bodies execute as plain JAX on
-CPU — the validation mode); on TPU backends it flips to False so the Mosaic
-path compiles.  Override via REPRO_PALLAS_INTERPRET=0/1.
+``interpret`` defaults to None on every wrapper, which resolves through the
+shared ``backend.default_interpret()`` policy: interpret mode only when the
+default backend is CPU (kernel bodies execute as plain XLA ops — the
+validation mode); TPU and GPU backends compile the Mosaic kernels.
+Override via REPRO_PALLAS_INTERPRET=0/1.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from .backend import default_interpret, resolve_interpret
 from .ggr_apply import apply_factors_pallas
-from .ggr_panel import panel_factor_pallas
+from .ggr_panel import batched_geqrt_pallas, panel_factor_pallas
 from .ggr_update import batched_update_pallas
 
 __all__ = [
     "default_interpret",
     "panel_qr",
     "apply_panel",
+    "batched_geqrt",
     "batched_update",
     "tsqrt",
     "ggr_qr_pallas",
 ]
 
 
-def default_interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
-
-
 def panel_qr(panel: jax.Array, pivot0: int = 0, interpret: bool | None = None):
     """(R, V, T) = fused GGR factorization of an (m, b) panel."""
-    itp = default_interpret() if interpret is None else interpret
-    return panel_factor_pallas(panel, pivot0=pivot0, interpret=itp)
+    return panel_factor_pallas(panel, pivot0=pivot0, interpret=interpret)
 
 
 def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256, interpret: bool | None = None):
     """Replay a factored panel's b transforms over trailing columns C."""
-    itp = default_interpret() if interpret is None else interpret
-    return apply_factors_pallas(V, T, C, pivot0=pivot0, block_w=block_w, interpret=itp)
+    return apply_factors_pallas(V, T, C, pivot0=pivot0, block_w=block_w,
+                                interpret=interpret)
+
+
+def batched_geqrt(tiles: jax.Array, n_pivots: int, block_b: int = 8,
+                  interpret: bool | None = None):
+    """Batched dense GEQRT sweeps over a (B, t, w) tile batch.
+
+    Triangularizes the first ``n_pivots`` columns of every tile; extra
+    columns ride along (ride an identity block to get the explicit tile
+    transform Qt).  The blocked QR driver's tile kernel.
+    """
+    return batched_geqrt_pallas(tiles, n_pivots=n_pivots, block_b=block_b,
+                                interpret=interpret)
 
 
 def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
@@ -53,9 +60,8 @@ def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
     up with zero problems and sliced back (see ``ggr_update.pad_batch``), so
     the grid always runs at full ``block_b`` granularity.
     """
-    itp = default_interpret() if interpret is None else interpret
     return batched_update_pallas(stacked, n_pivots=n_pivots, block_b=block_b,
-                                 interpret=itp)
+                                 interpret=interpret)
 
 
 def tsqrt(R_top: jax.Array, B: jax.Array, interpret: bool | None = None):
@@ -77,10 +83,15 @@ def ggr_qr_pallas(
 
     Right-looking panel loop: factor panel p (fused kernel), then one fused
     DET2-grid pass updates the whole trailing block while it is VMEM-resident.
+
+    NOTE: this is the original Python-unrolled panel loop (compile time scales
+    with ``n // panel``); the production driver is
+    ``repro.core.blocked.ggr_qr_blocked``, which drives the same kernels from
+    a ``fori_loop`` and adds the tree-coupled MXU schedule.
     """
     m, n = A.shape
     assert n % panel == 0, "pad columns to a panel multiple"
-    itp = default_interpret() if interpret is None else interpret
+    itp = resolve_interpret(interpret)
     R = A
     for p in range(n // panel):
         c0 = p * panel

@@ -23,6 +23,24 @@ from .qr_update import _tri_solve_lower, qr_append_rows, qr_downdate_row
 
 __all__ = ["LstsqResult", "RLSState", "RecursiveLS", "ggr_lstsq", "solve_triangular"]
 
+# Above this problem size the one-shot solvers dispatch their augmented sweep
+# to the blocked panel driver (``core.blocked.ggr_triangularize_blocked``):
+# batched tile kernels + tree coupling + GEMM trailing updates win once the
+# column loop of the unblocked sweep stops fitting the machine, while small
+# streaming problems keep the cheap single-sweep path.
+_BLOCKED_MIN_ROWS = 256
+_BLOCKED_MIN_PIVOTS = 128
+
+
+def _triangularize_auto(X: jax.Array, n_pivots: int) -> jax.Array:
+    """Size-routed augmented triangularization (unblocked vs blocked panel)."""
+    m = X.shape[0]
+    if m >= _BLOCKED_MIN_ROWS and n_pivots >= _BLOCKED_MIN_PIVOTS:
+        from repro.core.blocked import ggr_triangularize_blocked
+
+        return ggr_triangularize_blocked(X, n_pivots)
+    return ggr_triangularize(X, n_pivots)
+
 
 def solve_triangular(R: jax.Array, b: jax.Array, *, lower: bool = False,
                      trans: bool = False) -> jax.Array:
@@ -62,7 +80,7 @@ def ggr_lstsq(A: jax.Array, b: jax.Array) -> LstsqResult:
         raise ValueError(f"ggr_lstsq requires m >= n, got {A.shape}")
     vec = b.ndim == 1
     B = b[:, None] if vec else b
-    X = ggr_triangularize(jnp.concatenate([A, B], axis=1), n)
+    X = _triangularize_auto(jnp.concatenate([A, B], axis=1), n)
     R = jnp.triu(X[:n, :n])
     d = X[:n, n:]
     x = solve_triangular(R, d)
