@@ -1,6 +1,17 @@
 """Roofline aggregator: experiments/dryrun/*.json -> the §Roofline table.
 
     PYTHONPATH=src python -m benchmarks.roofline [--pod2] [--md]
+
+Blocked-driver mode — annotate ``BENCH_blocked.json`` (the artifact
+``benchmarks.run bench_blocked`` writes) with distance-to-roofline:
+
+    PYTHONPATH=src python -m benchmarks.roofline --blocked [PATH]
+
+measures this host's f32 GEMM peak with a jitted matmul probe (honest
+timing via ``repro.obs.device_timer`` — block_until_ready inside the
+clock), then rewrites the JSON in place adding a ``roofline`` section and
+per-record ``roofline_frac`` (achieved / peak) + ``roofline_headroom_x``
+fields, and prints the table.
 """
 from __future__ import annotations
 
@@ -8,6 +19,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN = os.path.join(REPO, "experiments", "dryrun")
@@ -40,10 +52,85 @@ def fmt_row(c) -> str:
     )
 
 
+def measure_peak_gflops(n: int = 1024, reps: int = 5) -> float:
+    """This host's achievable f32 GEMM rate: best-of-``reps`` jitted
+    (n, n) @ (n, n), timed with ``repro.obs.device_timer`` so the async
+    dispatch is blocked on *inside* the clock.  An achievable-peak probe
+    (XLA GEMM on real data), not a datasheet number — which is exactly the
+    roof the blocked QR driver could hope to hit."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    f = jax.jit(lambda x, y: x @ y)
+    jax.block_until_ready(f(a, b))  # compile outside the clock
+    best = float("inf")
+    for _ in range(reps):
+        with obs.device_timer() as t:
+            t.stop(f(a, b))
+        best = min(best, t.seconds)
+    return 2.0 * n**3 / best / 1e9
+
+
+def roofline_blocked(path: str, probe_n: int = 1024) -> int:
+    """Annotate a BENCH_blocked.json with distance-to-roofline, in place.
+
+    Returns a process exit code: nonzero when the file is missing or holds
+    no GFLOP/s records (so CI can gate on it).
+    """
+    if not os.path.exists(path):
+        print(f"roofline --blocked: {path} not found "
+              f"(run `python -m benchmarks.run bench_blocked` first)",
+              file=sys.stderr)
+        return 1
+    with open(path) as f:
+        out = json.load(f)
+    recs = [r for r in out.get("results", []) if "gflops" in r]
+    if not recs:
+        print(f"roofline --blocked: no gflops records in {path}",
+              file=sys.stderr)
+        return 1
+
+    peak = measure_peak_gflops(n=probe_n)
+    for r in recs:
+        r["roofline_frac"] = r["gflops"] / peak
+        r["roofline_headroom_x"] = peak / r["gflops"] if r["gflops"] else None
+    out["roofline"] = {"peak_gflops_f32_gemm": peak, "probe_n": probe_n,
+                       "note": "achievable peak = best-of-5 jitted f32 GEMM"}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+
+    print(f"### Blocked-QR roofline (host peak ~{peak:.1f} GFLOP/s, "
+          f"f32 GEMM probe n={probe_n})\n")
+    print("| driver | n | GFLOP/s | % of roofline | headroom |")
+    print("|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["n"], -r["gflops"])):
+        print(f"| {r['name']} | {r['n']} | {r['gflops']:.2f} "
+              f"| {100.0 * r['roofline_frac']:.1f}% "
+              f"| {r['roofline_headroom_x']:.1f}x |")
+    print(f"\nannotated {path}")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pod2", action="store_true")
+    ap.add_argument("--blocked", nargs="?", const=None, default=False,
+                    metavar="PATH",
+                    help="annotate a BENCH_blocked.json (default ./BENCH_"
+                         "blocked.json) with distance-to-roofline and exit")
+    ap.add_argument("--probe-n", type=int, default=1024,
+                    help="GEMM size for the peak probe (use a smaller value "
+                         "in smoke runs)")
     args = ap.parse_args()
+    if args.blocked is not False:
+        path = args.blocked or os.path.join(os.getcwd(), "BENCH_blocked.json")
+        sys.exit(roofline_blocked(path, probe_n=args.probe_n))
     pod = "pod2" if args.pod2 else "pod1"
     cells = load_cells(pod)
     print(f"### Roofline table ({pod}: "

@@ -44,11 +44,13 @@ serial TSQRT chain — kept as the baseline ``bench_blocked`` measures against.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.backend import resolve_interpret
 from repro.kernels.ggr_apply import apply_factors_pallas
 from repro.kernels.ggr_panel import batched_geqrt_pallas, panel_factor_pallas
@@ -193,29 +195,33 @@ def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
     pan = jax.lax.dynamic_slice(frame, (0, c0), (F, b)).reshape(p, b, b)
 
     # level 0: factor every row tile independently, identity riding -> Qt_i
-    tiles = jnp.concatenate([pan, jnp.broadcast_to(eye, (p, b, b))], axis=2)
-    out0 = batched_geqrt_pallas(tiles, n_pivots=b,
-                                block_b=block_b or p, interpret=interpret)
-    R = out0[:, :, :b]
-    C = jnp.einsum("pij,pjw->piw", out0[:, :, b:], frame.reshape(p, b, W))
+    with obs.named_span("repro/blocked/panel"):
+        tiles = jnp.concatenate([pan, jnp.broadcast_to(eye, (p, b, b))], axis=2)
+        out0 = batched_geqrt_pallas(tiles, n_pivots=b,
+                                    block_b=block_b or p, interpret=interpret)
+        R = out0[:, :, :b]
+    with obs.named_span("repro/blocked/trailing"):
+        C = jnp.einsum("pij,pjw->piw", out0[:, :, b:], frame.reshape(p, b, W))
 
     # binary-tree coupling of the per-tile R factors (log2(p) rounds);
     # each round is ONE batched compact-active-set sweep + ONE batched GEMM
     for ai, bi in _tree_levels(p):
         npair = len(ai)
-        E = jnp.broadcast_to(eye, (npair, b, b))
-        Z = jnp.zeros((npair, b, b), dtype)
-        stacked = jnp.concatenate(
-            [jnp.concatenate([R[ai], E, Z], axis=2),
-             jnp.concatenate([R[bi], Z, E], axis=2)], axis=1)
-        out = batched_update_pallas(stacked, n_pivots=b,
-                                    block_b=block_b or npair,
-                                    interpret=interpret)
-        R = R.at[ai].set(out[:, :b, :b])
-        Qt = out[:, :, b:]  # (npair, 2b, 2b) node transform
-        Ct = jnp.concatenate([C[ai], C[bi]], axis=1)
-        Ct = jnp.einsum("pij,pjw->piw", Qt, Ct)
-        C = C.at[ai].set(Ct[:, :b]).at[bi].set(Ct[:, b:])
+        with obs.named_span("repro/blocked/coupling"):
+            E = jnp.broadcast_to(eye, (npair, b, b))
+            Z = jnp.zeros((npair, b, b), dtype)
+            stacked = jnp.concatenate(
+                [jnp.concatenate([R[ai], E, Z], axis=2),
+                 jnp.concatenate([R[bi], Z, E], axis=2)], axis=1)
+            out = batched_update_pallas(stacked, n_pivots=b,
+                                        block_b=block_b or npair,
+                                        interpret=interpret)
+            R = R.at[ai].set(out[:, :b, :b])
+            Qt = out[:, :, b:]  # (npair, 2b, 2b) node transform
+        with obs.named_span("repro/blocked/trailing"):
+            Ct = jnp.concatenate([C[ai], C[bi]], axis=1)
+            Ct = jnp.einsum("pij,pjw->piw", Qt, Ct)
+            C = C.at[ai].set(Ct[:, :b]).at[bi].set(Ct[:, b:])
 
     frame = C.reshape(F, W)
     # exact panel-column write: [R; 0] (keeps finalized columns exactly zero
@@ -232,15 +238,17 @@ def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret):
     c0 = k * b
     frame = jax.lax.dynamic_slice(Xp, (c0, 0), (F, W))
     pan = jax.lax.dynamic_slice(frame, (0, c0), (F, b))
-    Rp, V, T = panel_factor_pallas(pan, pivot0=0, interpret=interpret)
+    with obs.named_span("repro/blocked/panel"):
+        Rp, V, T = panel_factor_pallas(pan, pivot0=0, interpret=interpret)
 
     bw = W if block_w is None else max(1, min(block_w, W))
     while W % bw:
         bw //= 2
 
     def apply(fr):
-        return apply_factors_pallas(V, T, fr, pivot0=0, block_w=bw,
-                                    interpret=interpret)
+        with obs.named_span("repro/blocked/trailing"):
+            return apply_factors_pallas(V, T, fr, pivot0=0, block_w=bw,
+                                        interpret=interpret)
 
     if pure_qr:
         # last panel of a pure QR has no trailing columns to update
@@ -324,8 +332,18 @@ def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
         raise ValueError(f"unknown schedule {schedule!r}")
     itp = resolve_interpret(interpret)
     sched = schedule if schedule != "auto" else ("tree" if itp else "fused")
-    return _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
-                                       block_w, block_b)
+    rec = obs.enabled() and not isinstance(X, jax.core.Tracer)
+    if not rec:
+        return _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
+                                           block_w, block_b)
+    with obs.span("repro/blocked/triangularize"):
+        t0 = time.perf_counter()
+        out = _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
+                                          block_w, block_b)
+        jax.block_until_ready(out)
+        obs.record_dispatch("blocked", obs.ggr_sweep_flops(m, w, n_pivots),
+                            time.perf_counter() - t0, schedule=sched)
+    return out
 
 
 def ggr_qr_blocked(A: jax.Array, tile: int = 64, schedule: str = "auto",

@@ -21,8 +21,12 @@ __all__ = [
     "cgr_mults",
     "gr_mults",
     "alpha_ratio",
+    "ggr_sweep_mults",
+    "ggr_append_mults",
+    "mults_to_flops",
     "householder_qr2_mults",
     "count_mults",
+    "MultCount",
 ]
 
 
@@ -43,6 +47,44 @@ def householder_qr2_mults(m: int, n: int) -> int:
     return int(m * n**2 - n**3 / 3 + m * n)
 
 
+def ggr_sweep_mults(m: int, w: int, n_pivots: int | None = None) -> int:
+    """Rectangular generalization of eq. 3: mults of one dense GGR sweep.
+
+    One sweep annihilates columns ``0..n_pivots-1`` below their diagonals on
+    an (m, w) matrix (trailing ``w - n_pivots`` columns — rhs data — ride
+    along).  The square model CGR_M(n) (eq. 3) decomposes *exactly* as
+    ``sum over column steps c of 3·(j·j - 1)`` with ``j = n - c`` the active
+    rows == active width; a rectangular step has ``m - c`` active rows and
+    ``w - c`` active columns, so the per-step cost generalizes to
+    ``3·((m-c)(w-c) - 1)`` and ``ggr_sweep_mults(n, n, n) == cgr_mults(n)``
+    by construction (asserted in tests).
+    """
+    if n_pivots is None:
+        n_pivots = min(m, w)
+    steps = max(0, min(n_pivots, m - 1, w))
+    return sum(3 * ((m - c) * (w - c) - 1) for c in range(steps))
+
+
+def ggr_append_mults(n: int, p: int, w: int) -> int:
+    """Mults of one compact active-set row-append sweep (the streaming/
+    serving kernel shape): upper-triangular (n, n) R with p appended rows,
+    total width w (>= n; rhs columns ride along).
+
+    Because R is already triangular, column step c only touches the pivot
+    row plus the p appended rows — the (p+1)-row active set
+    ``kernels.ggr_update`` keeps VMEM-resident — over the remaining
+    ``w - c`` columns, so the per-step model is ``3·((p+1)(w-c) - 1)``.
+    """
+    steps = max(0, min(n, w))
+    return sum(3 * ((p + 1) * (w - c) - 1) for c in range(steps))
+
+
+def mults_to_flops(mults: int) -> int:
+    """Model mults -> flops: each counted multiplication pairs with one
+    add/subtract in the DOTk/DET2 macro-op grids (FMA-shaped throughout)."""
+    return 2 * int(mults)
+
+
 def _dot_general_mults(eqn) -> int:
     (lhs, rhs) = (eqn.invars[0].aval, eqn.invars[1].aval)
     dnums = eqn.params["dimension_numbers"]
@@ -58,8 +100,13 @@ def _dot_general_mults(eqn) -> int:
     return batch * lhs_free * rhs_free * contract
 
 
-def _count_in_jaxpr(jaxpr, consts_mult=1) -> int:
+def _count_in_jaxpr(jaxpr) -> tuple[int, bool]:
+    """(mult count, exact) for one jaxpr.  ``exact`` turns False whenever the
+    walk had to *estimate*: a ``while`` body counted once (the trip count is
+    not static — ``fori_loop`` lowers here), or a ``cond`` whose branches
+    disagree (the max is taken)."""
     total = 0
+    exact = True
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
         if prim in ("mul", "div"):
@@ -70,36 +117,76 @@ def _count_in_jaxpr(jaxpr, consts_mult=1) -> int:
             total += _dot_general_mults(eqn)
         elif prim in ("while", "scan"):
             inner = eqn.params.get("body_jaxpr") or eqn.params.get("jaxpr")
-            trips = 1
+            sub, sub_exact = _count_in_jaxpr(inner.jaxpr)
+            exact &= sub_exact
             if prim == "scan":
-                trips = eqn.params.get("length", 1)
-                total += trips * _count_in_jaxpr(inner.jaxpr)
+                total += eqn.params.get("length", 1) * sub
             else:
-                # while: trip count unknowable statically; callers should prefer
-                # fori with known bounds surfaced via scan. We estimate using
-                # the cond-free body once and mark it (used only for reporting).
-                total += _count_in_jaxpr(inner.jaxpr)
+                # while: trip count unknowable statically; callers should
+                # prefer fori with known bounds surfaced via scan.  The
+                # cond-free body is counted ONCE — an under-count — and the
+                # estimate is flagged via ``exact=False`` on the result.
+                total += sub
+                if sub > 0:
+                    exact = False
         elif prim == "cond":
             branches = eqn.params["branches"]
-            total += max(_count_in_jaxpr(b.jaxpr) for b in branches)
+            counts = []
+            for b in branches:
+                sub, sub_exact = _count_in_jaxpr(b.jaxpr)
+                counts.append(sub)
+                exact &= sub_exact
+            total += max(counts)
+            if len(set(counts)) > 1:  # taken branch unknown -> estimate
+                exact = False
         elif prim in ("pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
                       "custom_vjp_call_jaxpr", "remat2", "checkpoint"):
             inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
             if inner is not None:
                 ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
-                total += _count_in_jaxpr(ij)
-    return total
+                sub, sub_exact = _count_in_jaxpr(ij)
+                total += sub
+                exact &= sub_exact
+    return total, exact
 
 
-def count_mults(fn, *args, unroll_loops: bool = False, **kwargs) -> int:
+class MultCount(int):
+    """An ``int`` mult count carrying an ``exact`` flag.
+
+    ``exact=False`` means the jaxpr walk had to estimate somewhere — a
+    data-dependent ``while`` body (which is what ``fori_loop`` lowers to)
+    was counted once, or ``cond`` branches of different cost were maxed —
+    so the value is a lower-bound-ish estimate, not a census.  Arithmetic
+    behaves like a plain int (comparisons/ratios in existing callers keep
+    working); the flag does not survive arithmetic, only the direct result
+    of ``count_mults`` carries it.
+    """
+
+    exact: bool = True
+
+    def __new__(cls, value: int, exact: bool = True):
+        self = super().__new__(cls, value)
+        self.exact = exact
+        return self
+
+    def __repr__(self) -> str:
+        return f"MultCount({int(self)}, exact={self.exact})"
+
+
+def count_mults(fn, *args, **kwargs) -> MultCount:
     """Empirical multiplication count of ``fn(*args)`` from its jaxpr.
 
-    With ``unroll_loops`` the caller guarantees fn contains no data-dependent
-    while loops (fori_loop lowers to while — prefer passing an unrolled or
-    scan-based variant for exact counts).
+    Returns a ``MultCount`` — an ``int`` whose ``exact`` attribute is False
+    when the count is an estimate: any data-dependent ``while`` body (note
+    ``fori_loop`` lowers to ``while``) is counted exactly once, silently
+    under-counting the loop, and ``cond`` contributes its most expensive
+    branch.  Prefer unrolled or ``scan``-based variants (static trip counts)
+    when an exact census is needed; check ``.exact`` before trusting a
+    number in a model-validation assert.
     """
     jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
-    return _count_in_jaxpr(jaxpr.jaxpr)
+    total, exact = _count_in_jaxpr(jaxpr.jaxpr)
+    return MultCount(total, exact)
 
 
 def unrolled_column_loop(step_fn, A: jax.Array, steps: int):

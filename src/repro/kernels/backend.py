@@ -19,6 +19,8 @@ import os
 
 import jax
 
+from repro.obs import _state as _obs_state
+
 __all__ = ["default_interpret", "resolve_interpret"]
 
 
@@ -35,5 +37,16 @@ def default_interpret() -> bool:
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
-    """Resolve a tri-state ``interpret`` argument against the backend default."""
-    return default_interpret() if interpret is None else bool(interpret)
+    """Resolve a tri-state ``interpret`` argument against the backend default.
+
+    Every public kernel wrapper funnels through here before its jitted core,
+    so when an ``repro.obs`` collector is installed each resolution is counted
+    (``kernels.interpret_resolutions`` by mode) — a cheap census of how often
+    kernel entry points are hit and which execution mode they chose.
+    """
+    itp = default_interpret() if interpret is None else bool(interpret)
+    reg = _obs_state._active()
+    if reg.enabled:
+        reg.counter("kernels.interpret_resolutions",
+                    mode="interpret" if itp else "compiled").inc()
+    return itp

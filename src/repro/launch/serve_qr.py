@@ -34,11 +34,23 @@ device, throughput scales with device count.
 
 emits one CSV line per run with throughput; ``--check`` folds a cross-backend
 max-error into the ``derived`` column (rows always have exactly 3 fields).
+
+Observability: the server is instrumented with ``repro.obs`` — per-kind
+queue-depth gauges, submit->flush queue-wait and flush-duration histograms,
+batch-size and padding-waste tracking, executable-cache-miss counters, and
+per-dispatch achieved-GFLOP/s derived from the ``core.counts`` analytic
+models.  All of it is a no-op until a collector is installed
+(``obs.install``/``obs.collecting``); ``--metrics PREFIX`` installs one for
+the CLI run and writes ``PREFIX.jsonl`` + ``PREFIX.prom`` snapshots (also
+triggered by the ``REPRO_OBS_SNAPSHOT`` env var).  Catalog:
+``docs/observability.md``.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import functools
+import os
 import sys
 import time
 from dataclasses import dataclass, field
@@ -47,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.solvers import ggr_lstsq, qr_append_rows_batched
 
 __all__ = ["QRServer", "make_workload"]
@@ -107,9 +120,52 @@ class QRServer:
     _queues: dict = field(default_factory=dict)
     _results: dict = field(default_factory=dict)  # group -> (cycle, outs)
     _cycles: dict = field(default_factory=dict)   # group -> completed flush count
+    _submit_times: dict = field(default_factory=dict)  # group -> [perf_counter]
+    _seen_dispatch: set = field(default_factory=set)   # (group, chunk_B) sigs
 
     def _group_cycle(self, key) -> int:
         return self._cycles.get(key, 0)
+
+    # ----------------------------------------------------------- observability
+    def _kind_depth(self, kind: str) -> int:
+        return sum(len(q) for k, q in self._queues.items() if k[0] == kind)
+
+    def _note_submit(self, key) -> None:
+        """Per-submit metrics (one enabled-check; no-op when not collecting)."""
+        if not obs.enabled():
+            return
+        self._submit_times.setdefault(key, []).append(time.perf_counter())
+        obs.counter("serve.requests_submitted", kind=key[0]).inc()
+        obs.gauge("serve.queue_depth", kind=key[0]).set(self._kind_depth(key[0]))
+
+    def _padded_chunk(self, nb: int, kind: str) -> int:
+        """Batch size a dispatch of ``nb`` requests actually runs at, after
+        pad_batch rounding (mesh: shards x block_b; pallas: block_b)."""
+        if self.mesh is not None:
+            gran = self.mesh.shape[self.mesh_axis] * (
+                1 if kind == "lstsq" else self.block_b)
+            return -(-nb // gran) * gran
+        if kind != "lstsq" and self.backend == "pallas":
+            return -(-nb // self.block_b) * self.block_b
+        return nb
+
+    def _note_chunk(self, key, nb: int, seconds: float, flops: float,
+                    R_factor=None) -> None:
+        """Per-dispatch metrics: achieved GFLOP/s (from the core.counts
+        models), padding waste, executable-cache misses, factor health."""
+        kind = key[0]
+        obs.record_dispatch("serve", flops, seconds, kind=kind)
+        padded = self._padded_chunk(nb, kind)
+        obs.gauge("serve.padding_waste", kind=kind).set(
+            (padded - nb) / padded if padded else 0.0)
+        sig = (key, nb)
+        if sig not in self._seen_dispatch:
+            # a new (group signature, chunk size) means jit traced + compiled
+            # a fresh executable for this dispatch
+            self._seen_dispatch.add(sig)
+            obs.counter("serve.executable_cache_miss", kind=kind).inc()
+        if R_factor is not None:
+            obs.factor_health(R_factor, "serve", kind=kind)
 
     def submit_append(self, R, U, d=None, Y=None) -> _Ticket:
         """Queue a row-append update of one (R[, d]) state."""
@@ -123,6 +179,7 @@ class QRServer:
         key = ("append", R.shape, str(R.dtype), U.shape, str(U.dtype), rhs_sig)
         q = self._queues.setdefault(key, [])
         q.append((R, U) if not has_rhs else (R, U, d, Y))
+        self._note_submit(key)
         return _Ticket("append", key, len(q) - 1, self._group_cycle(key))
 
     def submit_lstsq(self, A, b) -> _Ticket:
@@ -131,6 +188,7 @@ class QRServer:
         key = ("lstsq", A.shape, str(A.dtype), b.shape, str(b.dtype))
         q = self._queues.setdefault(key, [])
         q.append((A, b))
+        self._note_submit(key)
         return _Ticket("lstsq", key, len(q) - 1, self._group_cycle(key))
 
     def submit_kalman(self, R, d, F, Qi, H, z, G=None) -> _Ticket:
@@ -153,6 +211,7 @@ class QRServer:
                H.shape, str(H.dtype), z.shape, str(z.dtype), g_sig)
         q = self._queues.setdefault(key, [])
         q.append((R, d, F, Qi, H, z) if G is None else (R, d, F, Qi, H, z, G))
+        self._note_submit(key)
         return _Ticket("kalman", key, len(q) - 1, self._group_cycle(key))
 
     def pending(self) -> int:
@@ -161,9 +220,13 @@ class QRServer:
 
     def _dispatch_append(self, key, reqs):
         has_rhs = key[5] is not None
+        (p, n) = key[3]  # U shape
+        w = n + (key[5][2][1] if has_rhs else 0)  # + rhs width k
         outs = []
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
+            rec = obs.enabled()
+            t0 = time.perf_counter() if rec else 0.0
             Rb = jnp.stack([r[0] for r in chunk])
             Ub = jnp.stack([r[1] for r in chunk])
             common = dict(backend=self.backend, interpret=self.interpret,
@@ -177,6 +240,11 @@ class QRServer:
             else:
                 Rn = qr_append_rows_batched(Rb, Ub, **common)
                 outs.extend(Rn[i] for i in range(len(chunk)))
+            if rec:
+                jax.block_until_ready(Rn)
+                flops = len(chunk) * obs.ggr_append_flops(n, p, w)
+                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
+                                 flops, R_factor=Rn)
         return outs
 
     def _lstsq_call(self, Ab, bb):
@@ -192,22 +260,36 @@ class QRServer:
         return xs[:B], rs[:B]
 
     def _dispatch_lstsq(self, key, reqs):
+        (m, n) = key[1]  # A shape
+        k = key[3][1] if len(key[3]) > 1 else 1  # b may be (m,) or (m, k)
         outs = []
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
+            rec = obs.enabled()
+            t0 = time.perf_counter() if rec else 0.0
             Ab = jnp.stack([r[0] for r in chunk])
             bb = jnp.stack([r[1] for r in chunk])
             xs, rs = self._lstsq_call(Ab, bb)
             outs.extend((xs[i], rs[i]) for i in range(len(chunk)))
+            if rec:
+                jax.block_until_ready(xs)
+                flops = len(chunk) * obs.lstsq_flops(m, n, k)
+                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
+                                 flops)
         return outs
 
     def _dispatch_kalman(self, key, reqs):
         from repro.solvers.kalman import kf_step_batched
 
         has_G = key[-1] is not None
+        n = key[1][1]       # R shape (n, n)
+        w = key[7][1]       # Qi shape (w, w)
+        p = key[9][0]       # H shape (p, n)
         outs = []
         for lo in range(0, len(reqs), self.max_batch):
             chunk = reqs[lo:lo + self.max_batch]
+            rec = obs.enabled()
+            t0 = time.perf_counter() if rec else 0.0
 
             def field(i):
                 # model matrices are usually one shared object across the
@@ -227,6 +309,14 @@ class QRServer:
                                      block_b=self.block_b, mesh=self.mesh,
                                      mesh_axis=self.mesh_axis)
             outs.extend((Rn[i], dn[i]) for i in range(len(chunk)))
+            if rec:
+                jax.block_until_ready(Rn)
+                # fused SRIF stack: (w + 2n + p, w + n + 1) with w + n pivots
+                # -> n + p rows ride below the (triangular-by-construction) top
+                flops = len(chunk) * obs.ggr_append_flops(w + n, n + p,
+                                                          w + n + 1)
+                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
+                                 flops, R_factor=Rn)
         return outs
 
     def flush(self, kind: str | None = None) -> int:
@@ -246,17 +336,50 @@ class QRServer:
         for key in [k for k in self._queues
                     if kind is None or k[0] == kind]:
             reqs = self._queues.pop(key)
-            if key[0] == "append":
-                outs = self._dispatch_append(key, reqs)
-            elif key[0] == "kalman":
-                outs = self._dispatch_kalman(key, reqs)
+            rec = obs.enabled()
+            if rec:
+                now = time.perf_counter()
+                qwait = obs.histogram("serve.queue_wait_seconds", kind=key[0])
+                for ts in self._submit_times.pop(key, ()):
+                    qwait.observe(now - ts)
+                obs.histogram("serve.batch_size", kind=key[0]).observe(len(reqs))
+                group_span = obs.span(f"repro/serve/flush/{key[0]}")
             else:
-                outs = self._dispatch_lstsq(key, reqs)
+                self._submit_times.pop(key, None)
+                now = 0.0
+                group_span = contextlib.nullcontext()
+            with group_span:
+                if key[0] == "append":
+                    outs = self._dispatch_append(key, reqs)
+                elif key[0] == "kalman":
+                    outs = self._dispatch_kalman(key, reqs)
+                else:
+                    outs = self._dispatch_lstsq(key, reqs)
+            if rec:
+                # per-chunk dispatches already blocked, so this measures the
+                # whole group cycle: host stacking + every dispatch + scatter
+                obs.histogram("serve.flush_duration_seconds",
+                              kind=key[0]).observe(time.perf_counter() - now)
+                obs.counter("serve.requests_served", kind=key[0]).inc(len(reqs))
+                obs.gauge("serve.queue_depth",
+                          kind=key[0]).set(self._kind_depth(key[0]))
             cycle = self._group_cycle(key)
             self._results[key] = (cycle, outs)
             self._cycles[key] = cycle + 1
             served += len(reqs)
         return served
+
+    def drain(self) -> int:
+        """Block until every stored flush result is device-complete.
+
+        ``flush`` returns as soon as the last dispatch is *enqueued*; a
+        throughput measurement that only blocks on one ticket is flattered
+        by every other group still in flight.  Returns the number of
+        results waited on.
+        """
+        outs = [o for (_, group) in self._results.values() for o in group]
+        jax.block_until_ready(outs)
+        return len(outs)
 
     def result(self, ticket: _Ticket):
         """Fetch a flushed request's result.
@@ -279,7 +402,9 @@ class QRServer:
 
 
 def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
-    """Synthetic request mix: 3/4 row-append updates, 1/4 one-shot solves."""
+    """Synthetic request mix: row-append updates (3/4, every 8th of them a
+    bare no-rhs append — the result-is-one-array case the ``--check``
+    normalization must handle), one-shot solves (1/4)."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(num):
@@ -291,6 +416,9 @@ def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
             R = np.triu(rng.standard_normal((n, n))).astype(np.float32)
             np.fill_diagonal(R, np.abs(np.diag(R)) + 1.0)
             U = rng.standard_normal((rows, n)).astype(np.float32)
+            if i % 8 == 5:
+                reqs.append(("append", R, U))  # no-rhs: R-only update
+                continue
             d = rng.standard_normal((n, k)).astype(np.float32)
             Y = rng.standard_normal((rows, k)).astype(np.float32)
             reqs.append(("append", R, U, d, Y))
@@ -307,12 +435,25 @@ def _submit_all(server, reqs):
     return tickets
 
 
+def _as_tuple(res) -> tuple:
+    """Normalize a ticket result to a tuple of arrays.
+
+    No-rhs appends resolve to ONE bare array; lstsq/kalman/rhs-append
+    resolve to tuples.  Comparison code that ``zip``s two results would
+    silently iterate matrix *rows* for the bare-array case — always
+    normalize first.
+    """
+    return res if isinstance(res, tuple) else (res,)
+
+
 def main(argv=None):
     """Serving CLI: run a synthetic workload through one timed flush.
 
     Emits one 3-field CSV row (name, req_per_s, derived); ``--mesh N``
-    shards flushed groups over an N-device batch mesh and ``--check``
-    folds a cross-backend max-error into the derived column.
+    shards flushed groups over an N-device batch mesh, ``--check`` folds a
+    cross-backend max-error into the derived column, and ``--metrics P``
+    (or ``REPRO_OBS_SNAPSHOT=P``) collects ``repro.obs`` metrics for the
+    run and writes ``P.jsonl`` + ``P.prom`` snapshots.
     """
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
@@ -327,6 +468,10 @@ def main(argv=None):
                          "device_count=N)")
     ap.add_argument("--check", action="store_true",
                     help="cross-check a sample of results against the other backend")
+    ap.add_argument("--metrics", default=os.environ.get("REPRO_OBS_SNAPSHOT"),
+                    metavar="PREFIX",
+                    help="collect obs metrics and write PREFIX.jsonl + "
+                         "PREFIX.prom snapshots (default: $REPRO_OBS_SNAPSHOT)")
     args = ap.parse_args(argv)
 
     mesh = None
@@ -338,17 +483,22 @@ def main(argv=None):
         except ValueError as e:
             sys.exit(str(e))
 
+    reg = None
+    if args.metrics:
+        reg = obs.MetricsRegistry()
+        obs.install(reg)
+
     reqs = make_workload(args.requests, args.n, args.rows, args.nrhs)
     server = QRServer(backend=args.backend, max_batch=args.max_batch, mesh=mesh)
 
     tickets = _submit_all(server, reqs)  # warmup flush compiles the kernels
     server.flush()
-    jax.block_until_ready(server.result(tickets[-1])[0])
+    server.drain()
 
     tickets = _submit_all(server, reqs)
     t0 = time.perf_counter()
     served = server.flush()
-    jax.block_until_ready(server.result(tickets[-1])[0])
+    server.drain()  # block on ALL flushed groups, not just the last ticket
     dt = time.perf_counter() - t0
 
     check = ""
@@ -359,7 +509,7 @@ def main(argv=None):
         other.flush()
         err = 0.0
         for tk, ot in list(zip(tickets, oticks))[:: max(1, len(tickets) // 8)]:
-            a, b = server.result(tk), other.result(ot)
+            a, b = _as_tuple(server.result(tk)), _as_tuple(other.result(ot))
             err = max(err, max(float(jnp.abs(x - y).max()) for x, y in zip(a, b)))
         check = f";xbackend_maxerr={err:.2e}"
 
@@ -367,6 +517,16 @@ def main(argv=None):
     print("name,req_per_s,derived")
     print(f"serve_qr_{args.backend}_n{args.n}_p{args.rows},{served / dt:.1f},"
           f"max_batch={args.max_batch};mesh={args.mesh}{check}")
+
+    if reg is not None:
+        meta = {"cli": "serve_qr", "backend": args.backend, "mesh": args.mesh,
+                "requests": args.requests, "n": args.n, "rows": args.rows,
+                "req_per_s": served / dt}
+        obs.write_jsonl(f"{args.metrics}.jsonl", reg, meta)
+        obs.write_prometheus(f"{args.metrics}.prom", reg)
+        obs.uninstall()
+        print(f"serve_qr: wrote {args.metrics}.jsonl and {args.metrics}.prom",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

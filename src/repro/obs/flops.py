@@ -1,0 +1,68 @@
+"""Flop accounting: achieved-GFLOP/s per dispatch from the analytic models.
+
+The paper's performance claims are flops-per-watt claims, so the repo's own
+trajectory metric must be *achieved* flop rate, not speedup-over-self.  The
+flop numbers here come from the ``core.counts`` analytic multiplication
+models (eqs. 3-5 and their rectangular/append generalizations,
+``ggr_sweep_mults`` / ``ggr_append_mults``) — the same models
+``bench_counts`` validates against measured jaxpr counts — converted with
+``mults_to_flops`` (each macro-op multiplication pairs with one add in the
+DET2/FMA grids).
+
+``record_dispatch`` is the single chokepoint every instrumented dispatch
+site funnels through: it observes ``<layer>.dispatch_seconds`` and
+``<layer>.achieved_gflops`` histograms and bumps ``<layer>.dispatches`` —
+one histogram sample per dispatch, which is what "per-dispatch achieved
+GFLOP/s" means in the metric catalog.
+
+``repro.core.counts`` is imported lazily: ``core.blocked`` imports
+``repro.obs`` at module scope, and the ``repro.core`` package init imports
+``core.blocked`` — a top-level counts import here would close that cycle.
+"""
+from __future__ import annotations
+
+from ._state import _active
+
+__all__ = [
+    "ggr_sweep_flops",
+    "ggr_append_flops",
+    "lstsq_flops",
+    "record_dispatch",
+]
+
+
+def ggr_sweep_flops(m: int, w: int, n_pivots: int | None = None) -> int:
+    """Flops of one dense GGR triangularization sweep on an (m, w) matrix."""
+    from repro.core.counts import ggr_sweep_mults, mults_to_flops
+
+    return mults_to_flops(ggr_sweep_mults(m, w, n_pivots))
+
+
+def ggr_append_flops(n: int, p: int, w: int) -> int:
+    """Flops of one compact active-set row-append sweep: (n, n) triangular R
+    plus p appended rows, total width w (>= n when rhs columns ride along)."""
+    from repro.core.counts import ggr_append_mults, mults_to_flops
+
+    return mults_to_flops(ggr_append_mults(n, p, w))
+
+
+def lstsq_flops(m: int, n: int, k: int) -> int:
+    """Flops of one augmented least-squares solve: the dense sweep over
+    ``[A | b]`` (m, n+k) with n pivots plus the (n^2 k)-flop back solve."""
+    return ggr_sweep_flops(m, n + k, n) + n * n * k
+
+
+def record_dispatch(layer: str, flops: float, seconds: float, **labels) -> None:
+    """Record one timed dispatch: duration + achieved GFLOP/s histograms.
+
+    ``seconds`` must come from a blocked timer (``obs.device_timer``) or the
+    rate is fiction.  No-op under the null registry.
+    """
+    reg = _active()
+    if not reg.enabled:
+        return
+    reg.counter(f"{layer}.dispatches", **labels).inc()
+    reg.histogram(f"{layer}.dispatch_seconds", **labels).observe(seconds)
+    if seconds > 0.0:
+        reg.histogram(f"{layer}.achieved_gflops", **labels).observe(
+            flops / seconds / 1e9)

@@ -1,0 +1,90 @@
+"""Numerical-health gauges for factor states (ROADMAP item 5's sensors).
+
+Two signals, both cheap relative to the solves they watch:
+
+* **Condition proxy** — min/max ``|diag(R)|`` of a triangular factor and
+  their ratio.  For the (R, d) states every solver here maintains,
+  ``max|r_ii| / min|r_ii|`` lower-bounds ``cond_2(R)``; a collapsing pivot
+  is the first symptom of rank deficiency or an over-aggressive downdate.
+* **Orthogonality loss** — ``max |Q^T Q - I|`` with ``Q = A R^{-1}``
+  reconstructed implicitly (Q is never formed by the GGR paths, so this is
+  the only way to audit it).  It is O(m n^2) — as expensive as the solve —
+  so it is *sampled*: ``maybe_sample_orthogonality`` fires every
+  ``REPRO_OBS_ORTHO_EVERY``-th eligible call (default 16).
+
+Tracer-safety: all recorders silently skip when handed tracers (solvers are
+routinely vmapped/jitted; only eager calls with concrete arrays can report
+host-side gauges — batched serving records from its concrete flush results
+instead).  Everything no-ops under the null registry, before any device
+transfer happens.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+
+import numpy as np
+
+from ._state import _active
+
+__all__ = [
+    "factor_health",
+    "orthogonality_loss",
+    "maybe_sample_orthogonality",
+]
+
+_ortho_clock = itertools.count()
+
+
+def _concrete(*arrays) -> bool:
+    import jax
+
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def factor_health(R, layer: str, **labels) -> None:
+    """Record min/max ``|diag(R)|`` + condition-proxy gauges for a triangular
+    factor (or a (B, n, n) batch of them — the batch-wide excursion is what
+    serving wants).  Skips under tracing or the null registry."""
+    reg = _active()
+    if not reg.enabled or not _concrete(R):
+        return
+    diag = np.abs(np.diagonal(np.asarray(R, dtype=np.float64),
+                              axis1=-2, axis2=-1))
+    if diag.size == 0:
+        return
+    dmin, dmax = float(diag.min()), float(diag.max())
+    reg.gauge(f"{layer}.r_diag_min", **labels).set(dmin)
+    reg.gauge(f"{layer}.r_diag_max", **labels).set(dmax)
+    reg.gauge(f"{layer}.r_cond_proxy", **labels).set(
+        dmax / dmin if dmin > 0.0 else np.inf)
+
+
+def orthogonality_loss(A, R) -> float:
+    """``max |Q^T Q - I|`` for the implicit ``Q = A R^{-1}`` (float64 host
+    computation; A is (m, n), R the (n, n) upper factor of its QR)."""
+    Af = np.asarray(A, dtype=np.float64)
+    Rf = np.triu(np.asarray(R, dtype=np.float64))
+    n = Rf.shape[0]
+    # Q^T = R^{-T} A^T: one triangular-ish solve, no explicit inverse
+    Qt = np.linalg.solve(Rf.T, Af.T)
+    G = Qt @ Qt.T
+    return float(np.abs(G - np.eye(n)).max())
+
+
+def maybe_sample_orthogonality(A, R, layer: str, **labels) -> float | None:
+    """Sampled orthogonality audit: every N-th eligible call (N from
+    ``REPRO_OBS_ORTHO_EVERY``, default 16) computes ``orthogonality_loss``
+    and records it as ``<layer>.orthogonality_loss``; returns the loss when
+    sampled, else None."""
+    reg = _active()
+    if not reg.enabled or not _concrete(A, R):
+        return None
+    every = int(os.environ.get("REPRO_OBS_ORTHO_EVERY", "16"))
+    tick = next(_ortho_clock)
+    if every > 1 and tick % every:
+        return None
+    loss = orthogonality_loss(A, R)
+    reg.gauge(f"{layer}.orthogonality_loss", **labels).set(loss)
+    reg.counter(f"{layer}.orthogonality_samples", **labels).inc()
+    return loss

@@ -1,0 +1,55 @@
+"""Trace spans: host-side ``jax.profiler.TraceAnnotation`` + in-graph
+``jax.named_scope``, under one naming convention.
+
+Span names are slash-paths ``repro/<layer>/<stage>[/<detail>]`` — e.g.
+``repro/serve/flush/append``, ``repro/blocked/panel_geqrt`` — so a device
+profile groups by layer first and pipeline stage second (see
+``docs/observability.md`` for the catalog and how to read a profile).
+
+Two kinds of span, because JAX has two timelines:
+
+* ``span(name)`` — a **host-side** span: enters a
+  ``jax.profiler.TraceAnnotation`` so the region shows up on the host
+  timeline of a ``jax.profiler.trace`` capture, *and* a ``jax.named_scope``
+  so any operations staged out inside it carry the name in HLO metadata.
+  Use around dispatch sites (queue stacking, a flush group, a bench rep).
+* ``named_span(name)`` — the **in-graph** half only (``jax.named_scope``).
+  Use inside jitted/scanned code: it is a trace-time annotation with zero
+  runtime cost after compilation, and it is what lets a device profile
+  attribute kernel time to pipeline stages (panel factor vs tree coupling
+  vs trailing update).
+
+Both are cheap, but ``span`` still does two context entries per call; hot
+loops that flush thousands of groups per second should guard on
+``obs.registry().enabled`` like every other instrumentation site.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["span", "named_span", "annotate_fn"]
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Host-side + in-graph span (TraceAnnotation and named_scope)."""
+    with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+        yield
+
+
+def named_span(name: str):
+    """In-graph-only span for use inside jit/scan bodies (zero runtime cost)."""
+    return jax.named_scope(name)
+
+
+def annotate_fn(name: str, fn):
+    """Wrap ``fn`` so every call runs under ``span(name)``."""
+
+    def wrapped(*args, **kwargs):
+        with span(name):
+            return fn(*args, **kwargs)
+
+    wrapped.__name__ = getattr(fn, "__name__", "wrapped")
+    return wrapped

@@ -17,6 +17,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.ggr import ggr_triangularize
 
 from .qr_update import _tri_solve_lower, qr_append_rows, qr_downdate_row
@@ -83,6 +84,11 @@ def ggr_lstsq(A: jax.Array, b: jax.Array) -> LstsqResult:
     X = _triangularize_auto(jnp.concatenate([A, B], axis=1), n)
     R = jnp.triu(X[:n, :n])
     d = X[:n, n:]
+    # numerical-health sensors (no-ops unless a collector is installed, and
+    # under jit/vmap tracing; the orthogonality audit is sampled — see
+    # repro.obs.health)
+    obs.factor_health(R, "lstsq")
+    obs.maybe_sample_orthogonality(A, R, "lstsq")
     x = solve_triangular(R, d)
     resid = jnp.sqrt(jnp.sum(X[n:, n:] ** 2, axis=0))
     if vec:

@@ -7,7 +7,16 @@ import jax.numpy as jnp
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import alpha_ratio, cgr_mults, count_mults, gr_mults
+from repro.core import (
+    MultCount,
+    alpha_ratio,
+    cgr_mults,
+    count_mults,
+    ggr_append_mults,
+    ggr_sweep_mults,
+    gr_mults,
+    mults_to_flops,
+)
 from repro.core.ggr import ggr_column_step_at
 
 
@@ -83,3 +92,83 @@ def test_empirical_ratio_ggr_vs_gr_below_one():
     assert m_ggr < m_gr, (m_ggr, m_gr)
     # the paper's asymptotic claim is ~3/4; small-n with guard overhead lands near it
     assert m_ggr / m_gr < 0.95
+
+
+def test_sweep_model_reduces_to_eq3_at_square():
+    """The rectangular sweep model must recover eq. 3 exactly on squares —
+    CGR_M(n) decomposes as sum_c 3((n-c)^2 - 1), which is the c-th column
+    step of ggr_sweep_mults(n, n, n)."""
+    for n in (2, 3, 4, 8, 32, 100):
+        assert ggr_sweep_mults(n, n, n) == cgr_mults(n)
+
+
+def test_sweep_model_rectangular_shapes():
+    # more rows / wider trailing data both cost strictly more
+    assert ggr_sweep_mults(64, 32) > ggr_sweep_mults(32, 32)
+    assert ggr_sweep_mults(64, 48, n_pivots=32) > ggr_sweep_mults(64, 32, 32)
+    # degenerate shapes cost nothing
+    assert ggr_sweep_mults(1, 5) == 0
+    assert ggr_sweep_mults(0, 0) == 0
+    # flops model: every counted mult pairs with one add (FMA-shaped grids)
+    assert mults_to_flops(ggr_sweep_mults(8, 8)) == 2 * ggr_sweep_mults(8, 8)
+
+
+def test_append_model_beats_dense_resweep():
+    """The compact (p+1)-row active-set append must be strictly cheaper than
+    re-sweeping the dense [R; U] stack — the whole point of the streaming
+    kernel — and linear (not quadratic) in n for fixed p."""
+    n, p = 32, 4
+    assert ggr_append_mults(n, p, n) < ggr_sweep_mults(n + p, n, n)
+    r = ggr_append_mults(2 * n, p, 2 * n) / ggr_append_mults(n, p, n)
+    assert 3.0 < r < 4.5  # ~4x: (p+1)-row sweeps over ~2x columns, ~2x width
+
+
+def test_count_mults_exact_for_static_loops():
+    """Static-bound fori_loop lowers to scan — the trip count is in the jaxpr,
+    so the census is exact and scaled by the length."""
+    c = count_mults(
+        lambda x: jax.lax.fori_loop(0, 5, lambda i, a: a * 1.5, x),
+        jnp.ones(3))
+    assert isinstance(c, MultCount)
+    assert c.exact
+    assert int(c) == 15  # 3 mults/iter x 5 iters
+
+
+def test_count_mults_flags_while_estimates():
+    """Data-dependent while bodies are counted ONCE (trip count unknowable
+    statically) and the result must advertise it via exact=False."""
+    c = count_mults(
+        lambda x: jax.lax.while_loop(lambda a: a[0] < 100.0,
+                                     lambda a: a * 2.0, x),
+        jnp.ones(3))
+    assert not c.exact
+    assert int(c) == 3  # one body's worth
+
+    # a traced loop bound forces fori down the while path too
+    c2 = count_mults(
+        lambda x, k: jax.lax.fori_loop(0, k, lambda i, a: a * 2.0, x),
+        jnp.ones(3), 7)
+    assert not c2.exact
+
+
+def test_count_mults_flags_uneven_cond_branches():
+    c = count_mults(
+        lambda x, f: jax.lax.cond(f, lambda a: (a * a) * a, lambda a: a, x),
+        jnp.ones(3), jnp.asarray(True))
+    assert not c.exact
+    assert int(c) == 6  # max branch: two (3,)-shaped mults
+
+    # equal-cost branches stay exact
+    c2 = count_mults(
+        lambda x, f: jax.lax.cond(f, lambda a: a * 2.0, lambda a: a * 3.0, x),
+        jnp.ones(3), jnp.asarray(True))
+    assert c2.exact
+    assert int(c2) == 3
+
+
+def test_multcount_behaves_like_int():
+    c = MultCount(10, exact=False)
+    assert c == 10 and c * 2 == 20 and not c.exact
+    assert "exact=False" in repr(c)
+    # arithmetic demotes to plain int — the flag never silently propagates
+    assert not isinstance(c + 1, MultCount)
