@@ -72,8 +72,10 @@ def main():
     # state updates (kind-filtered flush is per-group-cycle safe)
     tk = _submit_all(sharded, reqs)
     n_lstsq = sharded.flush(kind="lstsq")
+    n_kal = sharded.flush(kind="kalman")
     n_app = sharded.flush(kind="append")
-    print(f"# tiered flush: {n_lstsq} lstsq first, {n_app} appends after — "
+    print(f"# tiered flush: {n_lstsq} lstsq, then {n_kal} kalman steps, then "
+          f"{n_app} appends — "
           f"{sum(1 for t in tk if sharded.result(t) is not None)} results ok")
 
 

@@ -2,12 +2,14 @@
 
 The realistic heavy-traffic QR workload is millions of *small* independent
 requests (RLS/Kalman state updates, windowed regressions), not one giant
-factorization.  ``QRServer`` is the batching layer: requests accumulate in
-per-(kind, shape, dtype) queues; ``flush()`` stacks each group and dispatches
-ONE fused call per group — the batched Pallas update kernel for row-appends
-and SRIF Kalman steps, a vmapped augmented-GGR sweep for one-shot lstsq —
-then scatters results back to submission order.  ``backend="reference"`` runs
-identical pure-JAX semantics for A/B checking.
+factorization.  ``QRServer`` is the closed-loop batching facade over the
+layered serving engine in ``repro.serve`` (typed requests -> continuous
+batcher -> padded/sharded dispatch -> admission policy): requests
+accumulate in per-(kind, shape, dtype) groups; ``flush()`` stacks each
+group and dispatches ONE fused call per group — the batched Pallas update
+kernel for row-appends and SRIF Kalman steps, a vmapped augmented-GGR sweep
+for one-shot lstsq — then scatters results back to submission order.
+``backend="reference"`` runs identical pure-JAX semantics for A/B checking.
 
 Request kinds: ``append`` (row-append a compact ``(R, d)`` state), ``lstsq``
 (one-shot solve), ``kalman`` (one square-root information filter
@@ -35,80 +37,59 @@ device, throughput scales with device count.
 emits one CSV line per run with throughput; ``--check`` folds a cross-backend
 max-error into the ``derived`` column (rows always have exactly 3 fields).
 
-Observability: the server is instrumented with ``repro.obs`` — per-kind
-queue-depth gauges, submit->flush queue-wait and flush-duration histograms,
-batch-size and padding-waste tracking, executable-cache-miss counters, and
-per-dispatch achieved-GFLOP/s derived from the ``core.counts`` analytic
-models.  All of it is a no-op until a collector is installed
-(``obs.install``/``obs.collecting``); ``--metrics PREFIX`` installs one for
-the CLI run and writes ``PREFIX.jsonl`` + ``PREFIX.prom`` snapshots (also
-triggered by the ``REPRO_OBS_SNAPSHOT`` env var).  Catalog:
-``docs/observability.md``.
+Open-loop serving (continuous batching, per-kind deadlines, admission
+control, double-buffered dispatch) lives one layer down: compose
+``repro.serve.ContinuousBatcher`` directly — see ``docs/serving.md`` and
+``benchmarks/bench_serve_async.py`` for the Poisson load-generator
+evidence.  This module stays the stable closed-loop API.
+
+Observability: the serving layers are instrumented with ``repro.obs`` —
+per-kind queue-depth gauges, submit->flush queue-wait and flush-duration
+histograms, batch-size, batch-close-reason, and padding-waste tracking,
+executable-cache-miss counters, and per-dispatch achieved-GFLOP/s derived
+from the ``core.counts`` analytic models.  All of it is a no-op until a
+collector is installed (``obs.install``/``obs.collecting``); ``--metrics
+PREFIX`` installs one for the CLI run and writes ``PREFIX.jsonl`` +
+``PREFIX.prom`` snapshots (also triggered by the ``REPRO_OBS_SNAPSHOT``
+env var).  Catalog: ``docs/observability.md``.
 """
 from __future__ import annotations
 
 import argparse
-import contextlib
-import functools
 import os
 import sys
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.solvers import ggr_lstsq, qr_append_rows_batched
+from repro.serve import ContinuousBatcher, Dispatcher, Ticket
+from repro.serve.requests import KINDS as _KINDS
 
 __all__ = ["QRServer", "make_workload"]
 
-
-@jax.jit
-def _batched_lstsq(Ab, bb):
-    """jit'd once — repeated flushes of the same shape reuse the executable."""
-    return jax.vmap(lambda A, b: ggr_lstsq(A, b)[:2])(Ab, bb)  # (x, resid)
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_lstsq_fn(mesh, mesh_axis: str):
-    """jit'd shard_map lstsq dispatch, cached per mesh (Mesh is hashable) so
-    repeated flushes reuse one executable instead of re-tracing."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.core.distributed import shard_map_compat
-
-    return jax.jit(shard_map_compat(
-        _batched_lstsq, mesh=mesh,
-        in_specs=(P(mesh_axis), P(mesh_axis)),
-        out_specs=(P(mesh_axis), P(mesh_axis)),
-    ))
-
-
-@dataclass(frozen=True)
-class _Ticket:
-    kind: str          # "append" | "lstsq" | "kalman"
-    group: tuple       # (kind, shapes, dtypes) signature the request queued under
-    index: int         # position within its group
-    cycle: int         # the group's flush cycle the request belongs to
-
-
-_KINDS = ("append", "lstsq", "kalman")
+_Ticket = Ticket  # legacy alias: tickets are now repro.serve.requests.Ticket
 
 
 @dataclass
 class QRServer:
     """Micro-batching dispatcher for QR solve/update requests.
 
+    Thin closed-loop facade over ``repro.serve``: submits admit into the
+    engine's per-group open batches, and only ``flush()`` closes them (no
+    deadlines, unbounded admission, latest-cycle result retention) — the
+    exact legacy semantics.
+
     backend: "pallas" (fused batched kernel) or "reference" (vmapped jnp).
     max_batch: dispatch granularity — each group is flushed in chunks of at
     most this many stacked requests (bounds the kernel's VMEM block count).
     mesh/mesh_axis: optional 1-D device mesh; when set, each chunk is
     dispatched through ``shard_map`` over ``mesh_axis`` with the batch padded
-    to ``shards x block_b`` (appends) or ``shards`` (lstsq) and sliced back.
-    Requests of the same shape but different dtypes land in *different*
-    groups — stacking never silently promotes a request's dtype.
+    to ``shards x block_b`` (appends/kalman) or ``shards`` (lstsq) and sliced
+    back.  Requests of the same shape but different dtypes land in
+    *different* groups — stacking never silently promotes a request's dtype.
     """
 
     backend: str = "pallas"
@@ -117,81 +98,42 @@ class QRServer:
     mesh: object | None = None   # jax.sharding.Mesh; object-typed to keep the
     mesh_axis: str = "batch"     # dataclass importable before jax device init
     block_b: int = 8
-    _queues: dict = field(default_factory=dict)
-    _results: dict = field(default_factory=dict)  # group -> (cycle, outs)
-    _cycles: dict = field(default_factory=dict)   # group -> completed flush count
-    _submit_times: dict = field(default_factory=dict)  # group -> [perf_counter]
-    _seen_dispatch: set = field(default_factory=set)   # (group, chunk_B) sigs
 
-    def _group_cycle(self, key) -> int:
-        return self._cycles.get(key, 0)
+    def __post_init__(self):
+        self._engine = ContinuousBatcher(
+            Dispatcher(backend=self.backend, max_batch=self.max_batch,
+                       interpret=self.interpret, mesh=self.mesh,
+                       mesh_axis=self.mesh_axis, block_b=self.block_b,
+                       double_buffer=False),
+            admit_max=None, retain_cycles=1)
 
-    # ----------------------------------------------------------- observability
-    def _kind_depth(self, kind: str) -> int:
-        return sum(len(q) for k, q in self._queues.items() if k[0] == kind)
+    # -------------------------------------------------- legacy introspection
+    @property
+    def _queues(self) -> dict:
+        """Open per-group request lists (legacy debugging surface)."""
+        return {k: b.requests for k, b in self._engine._open.items()}
 
-    def _note_submit(self, key) -> None:
-        """Per-submit metrics (one enabled-check; no-op when not collecting)."""
-        if not obs.enabled():
-            return
-        self._submit_times.setdefault(key, []).append(time.perf_counter())
-        obs.counter("serve.requests_submitted", kind=key[0]).inc()
-        obs.gauge("serve.queue_depth", kind=key[0]).set(self._kind_depth(key[0]))
+    @property
+    def _submit_times(self) -> dict:
+        """Pending per-group submit timestamps (empty when uninstrumented)."""
+        return {k: b.submit_times for k, b in self._engine._open.items()
+                if b.submit_times}
 
-    def _padded_chunk(self, nb: int, kind: str) -> int:
-        """Batch size a dispatch of ``nb`` requests actually runs at, after
-        pad_batch rounding (mesh: shards x block_b; pallas: block_b)."""
-        if self.mesh is not None:
-            gran = self.mesh.shape[self.mesh_axis] * (
-                1 if kind == "lstsq" else self.block_b)
-            return -(-nb // gran) * gran
-        if kind != "lstsq" and self.backend == "pallas":
-            return -(-nb // self.block_b) * self.block_b
-        return nb
+    @property
+    def _seen_dispatch(self) -> set:
+        """(group, padded-batch) signatures already compiled (obs-only)."""
+        return self._engine.dispatcher._seen_dispatch
 
-    def _note_chunk(self, key, nb: int, seconds: float, flops: float,
-                    R_factor=None) -> None:
-        """Per-dispatch metrics: achieved GFLOP/s (from the core.counts
-        models), padding waste, executable-cache misses, factor health."""
-        kind = key[0]
-        obs.record_dispatch("serve", flops, seconds, kind=kind)
-        padded = self._padded_chunk(nb, kind)
-        obs.gauge("serve.padding_waste", kind=kind).set(
-            (padded - nb) / padded if padded else 0.0)
-        sig = (key, nb)
-        if sig not in self._seen_dispatch:
-            # a new (group signature, chunk size) means jit traced + compiled
-            # a fresh executable for this dispatch
-            self._seen_dispatch.add(sig)
-            obs.counter("serve.executable_cache_miss", kind=kind).inc()
-        if R_factor is not None:
-            obs.factor_health(R_factor, "serve", kind=kind)
-
-    def submit_append(self, R, U, d=None, Y=None) -> _Ticket:
+    # ------------------------------------------------------------- submits
+    def submit_append(self, R, U, d=None, Y=None) -> Ticket:
         """Queue a row-append update of one (R[, d]) state."""
-        R, U = jnp.asarray(R), jnp.asarray(U)
-        has_rhs = d is not None
-        if has_rhs:
-            d, Y = jnp.asarray(d), jnp.asarray(Y)
-            rhs_sig = (d.shape, str(d.dtype), Y.shape, str(Y.dtype))
-        else:
-            rhs_sig = None
-        key = ("append", R.shape, str(R.dtype), U.shape, str(U.dtype), rhs_sig)
-        q = self._queues.setdefault(key, [])
-        q.append((R, U) if not has_rhs else (R, U, d, Y))
-        self._note_submit(key)
-        return _Ticket("append", key, len(q) - 1, self._group_cycle(key))
+        return self._engine.submit("append", R, U, d, Y)
 
-    def submit_lstsq(self, A, b) -> _Ticket:
+    def submit_lstsq(self, A, b) -> Ticket:
         """Queue a one-shot least-squares solve min ||Ax - b||."""
-        A, b = jnp.asarray(A), jnp.asarray(b)
-        key = ("lstsq", A.shape, str(A.dtype), b.shape, str(b.dtype))
-        q = self._queues.setdefault(key, [])
-        q.append((A, b))
-        self._note_submit(key)
-        return _Ticket("lstsq", key, len(q) - 1, self._group_cycle(key))
+        return self._engine.submit("lstsq", A, b)
 
-    def submit_kalman(self, R, d, F, Qi, H, z, G=None) -> _Ticket:
+    def submit_kalman(self, R, d, F, Qi, H, z, G=None) -> Ticket:
         """Queue one SRIF predict+observe step of a ``(R, d)`` Kalman state.
 
         Arguments follow ``repro.solvers.kalman.kf_step``: dynamics ``F``,
@@ -200,124 +142,15 @@ class QRServer:
         optional noise input map ``G``.  Requests sharing shapes/dtypes land
         in one group and advance in a single fused ``kf_step_batched``
         dispatch at the next flush; the result is the stepped ``(R', d')``.
+        Passing the *same* jax array object for a model operand across
+        requests lets the executor broadcast it instead of stacking copies.
         """
-        R, d, F, Qi = map(jnp.asarray, (R, d, F, Qi))
-        H, z = jnp.asarray(H), jnp.asarray(z)
-        if G is not None:
-            G = jnp.asarray(G)
-        g_sig = None if G is None else (G.shape, str(G.dtype))
-        key = ("kalman", R.shape, str(R.dtype), d.shape, str(d.dtype),
-               F.shape, str(F.dtype), Qi.shape, str(Qi.dtype),
-               H.shape, str(H.dtype), z.shape, str(z.dtype), g_sig)
-        q = self._queues.setdefault(key, [])
-        q.append((R, d, F, Qi, H, z) if G is None else (R, d, F, Qi, H, z, G))
-        self._note_submit(key)
-        return _Ticket("kalman", key, len(q) - 1, self._group_cycle(key))
+        return self._engine.submit("kalman", R, d, F, Qi, H, z, G)
 
+    # ------------------------------------------------------------ serving
     def pending(self) -> int:
         """Number of submitted requests not yet dispatched by a flush."""
-        return sum(len(q) for q in self._queues.values())
-
-    def _dispatch_append(self, key, reqs):
-        has_rhs = key[5] is not None
-        (p, n) = key[3]  # U shape
-        w = n + (key[5][2][1] if has_rhs else 0)  # + rhs width k
-        outs = []
-        for lo in range(0, len(reqs), self.max_batch):
-            chunk = reqs[lo:lo + self.max_batch]
-            rec = obs.enabled()
-            t0 = time.perf_counter() if rec else 0.0
-            Rb = jnp.stack([r[0] for r in chunk])
-            Ub = jnp.stack([r[1] for r in chunk])
-            common = dict(backend=self.backend, interpret=self.interpret,
-                          block_b=self.block_b, mesh=self.mesh,
-                          mesh_axis=self.mesh_axis)
-            if has_rhs:
-                db = jnp.stack([r[2] for r in chunk])
-                Yb = jnp.stack([r[3] for r in chunk])
-                Rn, dn = qr_append_rows_batched(Rb, Ub, db, Yb, **common)
-                outs.extend((Rn[i], dn[i]) for i in range(len(chunk)))
-            else:
-                Rn = qr_append_rows_batched(Rb, Ub, **common)
-                outs.extend(Rn[i] for i in range(len(chunk)))
-            if rec:
-                jax.block_until_ready(Rn)
-                flops = len(chunk) * obs.ggr_append_flops(n, p, w)
-                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
-                                 flops, R_factor=Rn)
-        return outs
-
-    def _lstsq_call(self, Ab, bb):
-        if self.mesh is None:
-            return _batched_lstsq(Ab, bb)
-        from repro.kernels import pad_batch
-
-        shards = self.mesh.shape[self.mesh_axis]
-        B = Ab.shape[0]
-        # zero problems are eps-guarded all the way through the solve
-        Ap, bp = pad_batch(Ab, shards), pad_batch(bb, shards)
-        xs, rs = _sharded_lstsq_fn(self.mesh, self.mesh_axis)(Ap, bp)
-        return xs[:B], rs[:B]
-
-    def _dispatch_lstsq(self, key, reqs):
-        (m, n) = key[1]  # A shape
-        k = key[3][1] if len(key[3]) > 1 else 1  # b may be (m,) or (m, k)
-        outs = []
-        for lo in range(0, len(reqs), self.max_batch):
-            chunk = reqs[lo:lo + self.max_batch]
-            rec = obs.enabled()
-            t0 = time.perf_counter() if rec else 0.0
-            Ab = jnp.stack([r[0] for r in chunk])
-            bb = jnp.stack([r[1] for r in chunk])
-            xs, rs = self._lstsq_call(Ab, bb)
-            outs.extend((xs[i], rs[i]) for i in range(len(chunk)))
-            if rec:
-                jax.block_until_ready(xs)
-                flops = len(chunk) * obs.lstsq_flops(m, n, k)
-                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
-                                 flops)
-        return outs
-
-    def _dispatch_kalman(self, key, reqs):
-        from repro.solvers.kalman import kf_step_batched
-
-        has_G = key[-1] is not None
-        n = key[1][1]       # R shape (n, n)
-        w = key[7][1]       # Qi shape (w, w)
-        p = key[9][0]       # H shape (p, n)
-        outs = []
-        for lo in range(0, len(reqs), self.max_batch):
-            chunk = reqs[lo:lo + self.max_batch]
-            rec = obs.enabled()
-            t0 = time.perf_counter() if rec else 0.0
-
-            def field(i):
-                # model matrices are usually one shared object across the
-                # whole fleet (one dynamics model, many tracks): pass them
-                # 2-D and let kf_step_batched broadcast instead of stacking
-                # B redundant copies; per-filter models still stack.
-                if i >= 2 and all(r[i] is chunk[0][i] for r in chunk):
-                    return chunk[0][i]
-                return jnp.stack([r[i] for r in chunk])
-
-            cols = [field(i) for i in range(len(chunk[0]))]
-            Gb = cols[6] if has_G else None
-            Rn, dn = kf_step_batched(cols[0], cols[1], cols[2], cols[3],
-                                     cols[4], cols[5], Gb,
-                                     backend=self.backend,
-                                     interpret=self.interpret,
-                                     block_b=self.block_b, mesh=self.mesh,
-                                     mesh_axis=self.mesh_axis)
-            outs.extend((Rn[i], dn[i]) for i in range(len(chunk)))
-            if rec:
-                jax.block_until_ready(Rn)
-                # fused SRIF stack: (w + 2n + p, w + n + 1) with w + n pivots
-                # -> n + p rows ride below the (triangular-by-construction) top
-                flops = len(chunk) * obs.ggr_append_flops(w + n, n + p,
-                                                          w + n + 1)
-                self._note_chunk(key, len(chunk), time.perf_counter() - t0,
-                                 flops, R_factor=Rn)
-        return outs
+        return self._engine.pending()
 
     def flush(self, kind: str | None = None) -> int:
         """Dispatch queued groups; returns the number of requests served.
@@ -330,44 +163,7 @@ class QRServer:
         *per group*: a later flush of the same group expires them, flushes
         of other groups don't).
         """
-        if kind is not None and kind not in _KINDS:
-            raise ValueError(f"unknown kind {kind!r}")
-        served = 0
-        for key in [k for k in self._queues
-                    if kind is None or k[0] == kind]:
-            reqs = self._queues.pop(key)
-            rec = obs.enabled()
-            if rec:
-                now = time.perf_counter()
-                qwait = obs.histogram("serve.queue_wait_seconds", kind=key[0])
-                for ts in self._submit_times.pop(key, ()):
-                    qwait.observe(now - ts)
-                obs.histogram("serve.batch_size", kind=key[0]).observe(len(reqs))
-                group_span = obs.span(f"repro/serve/flush/{key[0]}")
-            else:
-                self._submit_times.pop(key, None)
-                now = 0.0
-                group_span = contextlib.nullcontext()
-            with group_span:
-                if key[0] == "append":
-                    outs = self._dispatch_append(key, reqs)
-                elif key[0] == "kalman":
-                    outs = self._dispatch_kalman(key, reqs)
-                else:
-                    outs = self._dispatch_lstsq(key, reqs)
-            if rec:
-                # per-chunk dispatches already blocked, so this measures the
-                # whole group cycle: host stacking + every dispatch + scatter
-                obs.histogram("serve.flush_duration_seconds",
-                              kind=key[0]).observe(time.perf_counter() - now)
-                obs.counter("serve.requests_served", kind=key[0]).inc(len(reqs))
-                obs.gauge("serve.queue_depth",
-                          kind=key[0]).set(self._kind_depth(key[0]))
-            cycle = self._group_cycle(key)
-            self._results[key] = (cycle, outs)
-            self._cycles[key] = cycle + 1
-            served += len(reqs)
-        return served
+        return self._engine.flush(kind)
 
     def drain(self) -> int:
         """Block until every stored flush result is device-complete.
@@ -377,11 +173,9 @@ class QRServer:
         by every other group still in flight.  Returns the number of
         results waited on.
         """
-        outs = [o for (_, group) in self._results.values() for o in group]
-        jax.block_until_ready(outs)
-        return len(outs)
+        return self._engine.drain()
 
-    def result(self, ticket: _Ticket):
+    def result(self, ticket: Ticket):
         """Fetch a flushed request's result.
 
         Raises KeyError if the ticket's group has not been flushed since the
@@ -389,34 +183,52 @@ class QRServer:
         groups have happened meanwhile), or if a later flush of the same
         group already replaced the result.
         """
-        entry = self._results.get(ticket.group)
-        if entry is not None and entry[0] == ticket.cycle:
-            return entry[1][ticket.index]
-        if self._group_cycle(ticket.group) <= ticket.cycle:
-            queued = len(self._queues.get(ticket.group, ()))
-            state = f"not yet flushed ({queued} request(s) queued in its group)"
-        else:
-            state = "expired by a later flush of the same request group"
-        raise KeyError(f"ticket {ticket.kind}#{ticket.index} "
-                       f"(group cycle {ticket.cycle}): {state}")
+        return self._engine.result(ticket)
 
 
 def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
-    """Synthetic request mix: row-append updates (3/4, every 8th of them a
-    bare no-rhs append — the result-is-one-array case the ``--check``
-    normalization must handle), one-shot solves (1/4)."""
+    """Synthetic request mix covering all three kinds and their edge forms:
+    row-append updates (1/2, every 4th of them a bare no-rhs append — the
+    result-is-one-array case the ``--check`` normalization must handle),
+    SRIF Kalman steps (1/4, alternating fleet-shared model matrices — the
+    broadcast case — with per-track models), one-shot solves (1/4)."""
     rng = np.random.default_rng(seed)
+
+    def _triu_spd(size):
+        T = np.triu(rng.standard_normal((size, size))).astype(np.float32)
+        np.fill_diagonal(T, np.abs(np.diag(T)) + 1.0)
+        return T
+
+    def _models():
+        F = np.eye(n, dtype=np.float32) + 0.1 * rng.standard_normal(
+            (n, n)).astype(np.float32)
+        Qi = _triu_spd(n)
+        H = rng.standard_normal((rows, n)).astype(np.float32)
+        return F, Qi, H
+
+    # ONE shared set of jax-array model matrices: submit_kalman's asarray is
+    # a no-op on them, so every shared-model request carries the *same*
+    # objects and the executor broadcasts instead of stacking copies
+    F_sh, Qi_sh, H_sh = (jnp.asarray(M) for M in _models())
+
     reqs = []
     for i in range(num):
         if i % 4 == 3:
             A = rng.standard_normal((4 * n, n)).astype(np.float32)
             b = rng.standard_normal((4 * n, k)).astype(np.float32)
             reqs.append(("lstsq", A, b))
+        elif i % 4 == 1:
+            R = _triu_spd(n)
+            d = rng.standard_normal(n).astype(np.float32)
+            z = rng.standard_normal(rows).astype(np.float32)
+            if i % 8 == 1:
+                reqs.append(("kalman", R, d, F_sh, Qi_sh, H_sh, z))
+            else:
+                reqs.append(("kalman", R, d, *_models(), z))
         else:
-            R = np.triu(rng.standard_normal((n, n))).astype(np.float32)
-            np.fill_diagonal(R, np.abs(np.diag(R)) + 1.0)
+            R = _triu_spd(n)
             U = rng.standard_normal((rows, n)).astype(np.float32)
-            if i % 8 == 5:
+            if i % 8 == 4:
                 reqs.append(("append", R, U))  # no-rhs: R-only update
                 continue
             d = rng.standard_normal((n, k)).astype(np.float32)
@@ -430,6 +242,8 @@ def _submit_all(server, reqs):
     for r in reqs:
         if r[0] == "lstsq":
             tickets.append(server.submit_lstsq(r[1], r[2]))
+        elif r[0] == "kalman":
+            tickets.append(server.submit_kalman(*r[1:]))
         else:
             tickets.append(server.submit_append(*r[1:]))
     return tickets

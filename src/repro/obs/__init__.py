@@ -37,6 +37,7 @@ Metric catalog, span naming convention and profile-reading guide:
 """
 from ._state import _active, collecting, install, uninstall
 from .export import (
+    REQUIRED_ASYNC_SERVE_FAMILIES,
     REQUIRED_SERVE_FAMILIES,
     load_jsonl,
     missing_families,
@@ -72,6 +73,7 @@ __all__ = [
     "MetricsRegistry",
     "NULL",
     "NullRegistry",
+    "REQUIRED_ASYNC_SERVE_FAMILIES",
     "REQUIRED_SERVE_FAMILIES",
     "annotate_fn",
     "block_ready",

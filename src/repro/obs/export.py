@@ -39,6 +39,7 @@ __all__ = [
     "write_prometheus",
     "missing_families",
     "REQUIRED_SERVE_FAMILIES",
+    "REQUIRED_ASYNC_SERVE_FAMILIES",
 ]
 
 SCHEMA = "repro.obs/v1"
@@ -55,6 +56,21 @@ REQUIRED_SERVE_FAMILIES = (
     "serve.requests_served",
     "serve.achieved_gflops",
 )
+
+# what an instrumented `bench_serve_async --check` run must additionally
+# emit: the continuous-batching close-reason counter plus both admission
+# outcomes (the bench runs a tiny admission drill so reject/shed families
+# are present even when the measured run never overloads).
+REQUIRED_ASYNC_SERVE_FAMILIES = REQUIRED_SERVE_FAMILIES + (
+    "serve.batch_close",
+    "serve.admission_rejected",
+    "serve.requests_shed",
+)
+
+_PRESETS = {
+    "serve": REQUIRED_SERVE_FAMILIES,
+    "async": REQUIRED_ASYNC_SERVE_FAMILIES,
+}
 
 _QUANTILES = (0.5, 0.9, 0.99)
 
@@ -177,21 +193,25 @@ def main(argv=None) -> None:
     """Snapshot validation CLI — the CI gate on serving metrics artifacts.
 
         python -m repro.obs.export --validate serve_metrics.jsonl \\
-            [--require fam1,fam2,...]
+            [--require fam1,fam2,...] [--preset serve|async]
 
     Exits nonzero if the file is unreadable, schema-mismatched, or its LAST
-    snapshot is missing any required family (default: the serving set).
+    snapshot is missing any required family (default: the serving set;
+    ``--preset async`` gates on the continuous-batching superset that
+    ``bench_serve_async --check`` must emit).
     """
     ap = argparse.ArgumentParser()
     ap.add_argument("--validate", required=True, metavar="PATH",
                     help="JSONL snapshot file to validate")
     ap.add_argument("--require", default=None,
                     help="comma-separated metric families that must be "
-                         "present (default: the serve_qr required set)")
+                         "present (overrides --preset)")
+    ap.add_argument("--preset", default="serve", choices=sorted(_PRESETS),
+                    help="named required-family set (default: serve)")
     args = ap.parse_args(argv)
 
     required = (tuple(f for f in args.require.split(",") if f)
-                if args.require else REQUIRED_SERVE_FAMILIES)
+                if args.require else _PRESETS[args.preset])
     try:
         snaps = load_jsonl(args.validate)
     except (OSError, ValueError, json.JSONDecodeError) as e:

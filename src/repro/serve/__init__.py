@@ -1,0 +1,51 @@
+"""repro.serve — the layered async QR serving engine.
+
+The serving stack, bottom-up (the schedule-vs-compute decoupling of the
+paper's RDP/PE co-design, applied at the host/device boundary):
+
+    requests.py   typed Request/Ticket + group signatures (what may stack)
+    dispatch.py   per-kind executors, pad-before-jit, shard_map path,
+                  bounded executable cache, double-buffered in-flight chunks
+    batcher.py    continuous batching: open batches close on max_batch /
+                  deadline / flush; per-(group, cycle) results
+    policy.py     admission control: per-kind latency tiers, reject/shed
+
+``repro.launch.serve_qr.QRServer`` remains the backwards-compatible
+closed-loop facade over these layers; new deployments compose them
+directly::
+
+    from repro.serve import (AdmissionPolicy, ContinuousBatcher, Dispatcher,
+                             LatencyTier)
+
+    engine = ContinuousBatcher(
+        Dispatcher(backend="reference", max_batch=64, double_buffer=True),
+        AdmissionPolicy(tiers={"lstsq": LatencyTier(deadline=0.002)}),
+        admit_max=64, retain_cycles=None)
+    t = engine.submit("lstsq", A, b)
+    engine.poll()                # serve-loop heartbeat: deadlines + pump
+    engine.flush(); engine.drain()
+    x, resid = engine.result(t)
+
+Guide with the layer diagram and knob catalog: ``docs/serving.md``.
+"""
+from .batcher import ContinuousBatcher, OpenBatch
+from .dispatch import Dispatcher, ExecutableCache, InFlight
+from .policy import AdmissionPolicy, LatencyTier, Rejected, ShedError
+from .requests import KINDS, Request, Ticket, group_signature, make_request
+
+__all__ = [
+    "AdmissionPolicy",
+    "ContinuousBatcher",
+    "Dispatcher",
+    "ExecutableCache",
+    "InFlight",
+    "KINDS",
+    "LatencyTier",
+    "OpenBatch",
+    "Rejected",
+    "Request",
+    "ShedError",
+    "Ticket",
+    "group_signature",
+    "make_request",
+]

@@ -1,0 +1,367 @@
+"""Batch executors and the device-dispatch layer of the serving engine.
+
+One ``Dispatcher`` owns everything between "a closed batch of typed
+requests" and "per-request results": per-kind executors (append / lstsq /
+kalman), the shard_map + ``pad_batch`` sharded path, the per-server
+executable cache, and the double-buffering that overlaps host-side stacking
+of batch k+1 with batch k's device dispatch.
+
+**Padding before jit.**  Every chunk is zero-padded on the host to the
+granularity its kernel path actually runs at (``padded_chunk``: mesh →
+``shards x block_b``, single-device pallas → ``block_b``) *before* the
+jitted entry point sees it.  Two chunk sizes that round to the same padded
+batch therefore hit ONE executable — which is also what makes the
+``serve.executable_cache_miss`` accounting honest: it keys on the padded
+size, not the raw chunk size (the old monolithic server keyed on the raw
+size and double-counted).  Zero problems are exact fixed points of the
+eps-guarded sweeps, so the pad rows are sliced off afterwards unchanged.
+
+**Double buffering.**  jax dispatch is asynchronous: calling a jitted
+executor enqueues device work and returns array futures.  In
+``double_buffer=True`` mode the dispatcher never blocks at dispatch time —
+it records an ``InFlight`` handle per chunk and the caller (the continuous
+batcher) finalizes handles later (``pump`` polls readiness without
+blocking, ``drain`` blocks), so the host stacks the next batch while the
+device chews the previous one.  ``double_buffer=False`` reproduces the
+legacy closed-loop timing: each chunk is finalized (and, under an installed
+``repro.obs`` collector, blocked and timed) before the next is stacked.
+
+**Executable cache.**  Sharded lstsq dispatch functions are built through a
+bounded per-server LRU (``ExecutableCache``) instead of a module-level
+``functools.lru_cache(maxsize=None)`` — a long-lived server that cycles
+meshes no longer pins dead ``Mesh`` objects (and their device buffers)
+forever.  The ``(group, padded-batch)`` signatures seen by
+``serve.executable_cache_miss`` are the per-(kind, padded-shape) view of
+the underlying jit caches.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+
+__all__ = ["Dispatcher", "ExecutableCache", "InFlight"]
+
+
+class ExecutableCache:
+    """Bounded LRU of built executables, keyed by hashable signatures.
+
+    ``get(key, build)`` returns the cached value or builds, inserts, and
+    evicts the least-recently-used entry past ``maxsize``.  Eviction drops
+    the only reference the serving layer holds, so jitted closures over
+    retired meshes become collectable.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._entries: OrderedDict = OrderedDict()
+
+    def get(self, key, build):
+        try:
+            value = self._entries[key]
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return value
+        except KeyError:
+            pass
+        self.misses += 1
+        value = build()
+        self._entries[key] = value
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return value
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries)
+
+
+@jax.jit
+def _batched_lstsq(Ab, bb):
+    """jit'd once — repeated flushes of the same padded shape reuse the
+    executable."""
+    from repro.solvers import ggr_lstsq
+
+    return jax.vmap(lambda A, b: ggr_lstsq(A, b)[:2])(Ab, bb)  # (x, resid)
+
+
+def _build_sharded_lstsq(mesh, mesh_axis: str):
+    """jit'd shard_map lstsq dispatch for one mesh (cached per server)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import shard_map_compat
+
+    return jax.jit(shard_map_compat(
+        _batched_lstsq, mesh=mesh,
+        in_specs=(P(mesh_axis), P(mesh_axis)),
+        out_specs=(P(mesh_axis), P(mesh_axis)),
+    ))
+
+
+def _pad_to(x: jax.Array, batch: int) -> jax.Array:
+    """Zero-pad dim 0 up to exactly ``batch`` rows (no-op when already
+    there)."""
+    if x.shape[0] == batch:
+        return x
+    from repro.kernels import pad_batch
+
+    return pad_batch(x, batch)
+
+
+@dataclass
+class InFlight:
+    """One enqueued chunk awaiting finalization (blocking + accounting)."""
+
+    key: tuple             # group signature
+    nb: int                # real (un-padded) request count in the chunk
+    t0: float              # host perf_counter at stack start
+    outs: list             # per-request results (arrays or tuples of arrays)
+    flops: float           # analytic useful-work flops for the chunk
+    r_factor: object       # batched R for factor-health gauges (or None)
+    record: bool           # obs was collecting at dispatch time
+    done_at: float | None = None
+    finalized: bool = False
+
+    def _leaves(self):
+        for o in self.outs:
+            if isinstance(o, tuple):
+                yield from o
+            else:
+                yield o
+
+    def ready(self) -> bool:
+        """True when every result buffer is device-complete (non-blocking)."""
+        return all(getattr(x, "is_ready", lambda: True)()
+                   for x in self._leaves())
+
+    def block(self) -> None:
+        jax.block_until_ready(list(self._leaves()))
+
+
+@dataclass
+class Dispatcher:
+    """Chunked, padded, optionally sharded executor for closed batches.
+
+    Mirrors the legacy ``QRServer`` dispatch knobs: ``backend`` ("pallas" |
+    "reference"), ``max_batch`` chunk granularity, ``interpret`` /
+    ``block_b`` kernel knobs, optional ``mesh``/``mesh_axis`` for shard_map
+    dispatch.  ``double_buffer`` selects async (see module docstring).
+    """
+
+    backend: str = "pallas"
+    max_batch: int = 64
+    interpret: bool | None = None
+    mesh: object | None = None
+    mesh_axis: str = "batch"
+    block_b: int = 8
+    double_buffer: bool = False
+    cache_size: int = 32
+    executables: ExecutableCache = None  # built in __post_init__
+    _seen_dispatch: set = field(default_factory=set)  # (group, padded_B)
+    _inflight: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.executables is None:
+            self.executables = ExecutableCache(self.cache_size)
+
+    # ------------------------------------------------------------- padding
+    def padded_chunk(self, nb: int, kind: str) -> int:
+        """Batch size a dispatch of ``nb`` requests actually runs at, after
+        pad_batch rounding (mesh: shards x block_b, lstsq shards; single
+        device: block_b for every kind and backend).
+
+        Rounding *every* single-device path to ``block_b`` — not just the
+        pallas kernel that needs the granularity — is what makes continuous
+        batching viable: deadline closes produce arbitrary chunk sizes, and
+        an unpadded jit would compile one executable per distinct size.
+        Zero problems are exact fixed points of the eps-guarded sweeps, so
+        pad lanes come back unchanged and are sliced off."""
+        if self.mesh is not None:
+            gran = self.mesh.shape[self.mesh_axis] * (
+                1 if kind == "lstsq" else self.block_b)
+        else:
+            gran = self.block_b
+        return -(-nb // gran) * gran
+
+    # ----------------------------------------------------------- executors
+    def _kernel_opts(self) -> dict:
+        return dict(backend=self.backend, interpret=self.interpret,
+                    block_b=self.block_b, mesh=self.mesh,
+                    mesh_axis=self.mesh_axis)
+
+    def _exec_append(self, chunk):
+        """Stack + pad one append chunk, dispatch the fused batched kernel."""
+        from repro.solvers import qr_append_rows_batched
+
+        nb = len(chunk)
+        P = self.padded_chunk(nb, "append")
+        has_rhs = chunk[0].arrays[2] is not None
+        Rb = _pad_to(jnp.stack([r.arrays[0] for r in chunk]), P)
+        Ub = _pad_to(jnp.stack([r.arrays[1] for r in chunk]), P)
+        n, p = Rb.shape[2], Ub.shape[1]
+        if has_rhs:
+            db = _pad_to(jnp.stack([r.arrays[2] for r in chunk]), P)
+            Yb = _pad_to(jnp.stack([r.arrays[3] for r in chunk]), P)
+            Rn, dn = qr_append_rows_batched(Rb, Ub, db, Yb,
+                                            **self._kernel_opts())
+            Rn, dn = Rn[:nb], dn[:nb]
+            outs = [(Rn[i], dn[i]) for i in range(nb)]
+            w = n + Yb.shape[2]
+        else:
+            Rn = qr_append_rows_batched(Rb, Ub, **self._kernel_opts())[:nb]
+            outs = [Rn[i] for i in range(nb)]
+            w = n
+        return outs, nb * obs.ggr_append_flops(n, p, w), Rn
+
+    def _exec_lstsq(self, chunk):
+        """Stack + pad one lstsq chunk, dispatch the vmapped augmented
+        sweep (shard_mapped over the mesh when one is set)."""
+        nb = len(chunk)
+        P = self.padded_chunk(nb, "lstsq")
+        Ab = _pad_to(jnp.stack([r.arrays[0] for r in chunk]), P)
+        bb = _pad_to(jnp.stack([r.arrays[1] for r in chunk]), P)
+        m, n = Ab.shape[1], Ab.shape[2]
+        k = bb.shape[2] if bb.ndim > 2 else 1
+        if self.mesh is None:
+            xs, rs = _batched_lstsq(Ab, bb)
+        else:
+            fn = self.executables.get(
+                ("lstsq", self.mesh, self.mesh_axis),
+                lambda: _build_sharded_lstsq(self.mesh, self.mesh_axis))
+            xs, rs = fn(Ab, bb)
+        xs, rs = xs[:nb], rs[:nb]
+        outs = [(xs[i], rs[i]) for i in range(nb)]
+        return outs, nb * obs.lstsq_flops(m, n, k), None
+
+    def _exec_kalman(self, chunk):
+        """Stack + pad one kalman chunk, dispatch the fused SRIF step.
+
+        Model operands (F, Qi, H, z, G) that are the SAME array object
+        across the whole chunk — one dynamics model, many tracks — stay 2-D
+        and broadcast inside ``kf_step_batched`` instead of stacking B
+        redundant copies; per-filter models stack (and pad) normally.
+        """
+        from repro.solvers.kalman import kf_step_batched
+
+        nb = len(chunk)
+        P = self.padded_chunk(nb, "kalman")
+        has_G = chunk[0].arrays[6] is not None
+        nfields = 7 if has_G else 6
+
+        def fld(i):
+            if i >= 2 and all(r.arrays[i] is chunk[0].arrays[i]
+                              for r in chunk):
+                return chunk[0].arrays[i]  # shared: broadcast, don't stack
+            return _pad_to(jnp.stack([r.arrays[i] for r in chunk]), P)
+
+        cols = [fld(i) for i in range(nfields)]
+        # per-filter state must always carry the padded batch dim
+        n, w, p = cols[0].shape[-1], cols[3].shape[-1], cols[4].shape[-2]
+        Rn, dn = kf_step_batched(cols[0], cols[1], cols[2], cols[3],
+                                 cols[4], cols[5],
+                                 cols[6] if has_G else None,
+                                 **self._kernel_opts())
+        Rn, dn = Rn[:nb], dn[:nb]
+        outs = [(Rn[i], dn[i]) for i in range(nb)]
+        # fused SRIF stack: (w + 2n + p, w + n + 1) with w + n pivots
+        # -> n + p rows ride below the (triangular-by-construction) top
+        flops = nb * obs.ggr_append_flops(w + n, n + p, w + n + 1)
+        return outs, flops, Rn
+
+    _EXECUTORS = {"append": _exec_append, "lstsq": _exec_lstsq,
+                  "kalman": _exec_kalman}
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch(self, key: tuple, reqs: list) -> tuple[list, list[InFlight]]:
+        """Dispatch one closed batch in ``max_batch`` chunks.
+
+        Returns ``(outs, handles)``: per-request results in submission
+        order, plus one ``InFlight`` handle per chunk.  In double-buffer
+        mode the handles are un-finalized (the caller pumps/drains them);
+        otherwise they are finalized here, chunk by chunk, before the next
+        chunk is stacked — the legacy closed-loop behavior.
+        """
+        kind = key[0]
+        exec_one = self._EXECUTORS[kind]
+        outs: list = []
+        handles: list[InFlight] = []
+        for lo in range(0, len(reqs), self.max_batch):
+            chunk = reqs[lo:lo + self.max_batch]
+            rec = obs.enabled()
+            t0 = time.perf_counter() if rec else 0.0
+            chunk_outs, flops, r_factor = exec_one(self, chunk)
+            outs.extend(chunk_outs)
+            infl = InFlight(key, len(chunk), t0, chunk_outs, flops,
+                            r_factor, rec)
+            if rec:
+                # compilation happens at enqueue: count the miss now, keyed
+                # on the PADDED batch (what the jit cache actually keys on)
+                sig = (key, self.padded_chunk(len(chunk), kind))
+                if sig not in self._seen_dispatch:
+                    self._seen_dispatch.add(sig)
+                    obs.counter("serve.executable_cache_miss",
+                                kind=kind).inc()
+            if self.double_buffer:
+                self._inflight.append(infl)
+            else:
+                self.finalize(infl)
+            handles.append(infl)
+        return outs, handles
+
+    # -------------------------------------------------------- finalization
+    def finalize(self, infl: InFlight) -> None:
+        """Block (if accounting) and record one chunk's dispatch metrics."""
+        if infl.finalized:
+            return
+        infl.finalized = True
+        if not infl.record:
+            if infl.done_at is None and infl.ready():
+                infl.done_at = time.perf_counter()
+            return
+        infl.block()
+        if infl.done_at is None:
+            infl.done_at = time.perf_counter()
+        kind = infl.key[0]
+        obs.record_dispatch("serve", infl.flops, infl.done_at - infl.t0,
+                            kind=kind)
+        padded = self.padded_chunk(infl.nb, kind)
+        obs.gauge("serve.padding_waste", kind=kind).set(
+            (padded - infl.nb) / padded if padded else 0.0)
+        if infl.r_factor is not None:
+            obs.factor_health(infl.r_factor, "serve", kind=kind)
+
+    def pump(self) -> int:
+        """Finalize every in-flight chunk whose buffers are ready
+        (non-blocking).  Returns the number finalized."""
+        done = [i for i in self._inflight if i.ready()]
+        for infl in done:
+            if infl.done_at is None:
+                infl.done_at = time.perf_counter()
+            self.finalize(infl)
+        self._inflight = [i for i in self._inflight if not i.finalized]
+        return len(done)
+
+    def drain(self) -> int:
+        """Block on and finalize ALL in-flight chunks.  Returns the count."""
+        pending = self._inflight
+        self._inflight = []
+        for infl in pending:
+            infl.block()
+            if infl.done_at is None:
+                infl.done_at = time.perf_counter()
+            self.finalize(infl)
+        return len(pending)

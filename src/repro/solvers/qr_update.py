@@ -107,12 +107,15 @@ def _update_stacked(stacked: jax.Array, n: int, backend: str,
                           interpret=interpret)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)
 def _sharded_update_fn(mesh, mesh_axis: str, n: int, backend: str,
                        interpret: bool | None, block_b: int):
     """jit'd shard_map dispatch, cached per (mesh, schedule) so repeated
     flushes of the same group shape reuse one executable instead of
-    re-tracing the mapped kernel every call (Mesh is hashable)."""
+    re-tracing the mapped kernel every call (Mesh is hashable).  Bounded:
+    an unbounded cache would pin every ``Mesh`` a long-lived server ever
+    cycled through (the serving layer's per-server ``ExecutableCache`` in
+    ``repro.serve.dispatch`` is the primary cache; this is the backstop)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.core.distributed import shard_map_compat

@@ -158,3 +158,124 @@ def test_serve_qr_cli_rejects_oversized_mesh():
     )
     assert out.returncode != 0
     assert "8-device batch mesh" in out.stderr
+
+
+# ------------------------------------------- continuous batching (PR 7 layers)
+
+def test_kind_restricted_flush_keeps_other_groups_live():
+    """flush(kind=...) must dispatch ONLY matching groups: other kinds stay
+    queued (still-pending KeyError), and their tickets must NOT be expired —
+    they resolve normally once their own kind flushes."""
+    from repro.launch.serve_qr import QRServer, make_workload, _submit_all
+
+    reqs = make_workload(9, n=5, rows=2, k=1, seed=54)
+    server = QRServer(backend="reference")
+    tickets = _submit_all(server, reqs)
+    by_kind = {}
+    for r, t in zip(reqs, tickets):
+        by_kind.setdefault(r[0], []).append(t)
+    assert set(by_kind) == {"append", "lstsq", "kalman"}
+
+    served = server.flush(kind="kalman")
+    assert served == len(by_kind["kalman"])
+    for t in by_kind["kalman"]:
+        server.result(t)
+    for t in by_kind["append"] + by_kind["lstsq"]:
+        with pytest.raises(KeyError, match="not yet flushed"):
+            server.result(t)
+
+    server.flush(kind="lstsq")
+    for t in by_kind["lstsq"]:
+        server.result(t)
+    # the kalman tickets are STILL live: other-kind flushes never advance
+    # their group's cycle
+    for t in by_kind["kalman"]:
+        server.result(t)
+    server.flush()
+    for t in by_kind["append"]:
+        server.result(t)
+
+
+def test_deadline_close_resolves_like_explicit_flush():
+    """A deadline-closed batch must store results exactly like flush():
+    same tickets, same cycle, bitwise-equal arrays."""
+    from repro.launch.serve_qr import make_workload
+    from repro.serve import (AdmissionPolicy, ContinuousBatcher, Dispatcher,
+                             LatencyTier)
+
+    class Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    reqs = make_workload(8, n=5, rows=2, k=1, seed=55)
+    clock = Clock()
+    tiers = {k: LatencyTier(deadline=1.0) for k in ("append", "lstsq",
+                                                    "kalman")}
+    by_deadline = ContinuousBatcher(Dispatcher(backend="reference"),
+                                    AdmissionPolicy(tiers=tiers),
+                                    retain_cycles=None, clock=clock)
+    by_flush = ContinuousBatcher(Dispatcher(backend="reference"),
+                                 retain_cycles=None)
+    td = [by_deadline.submit(r[0], *r[1:]) for r in reqs]
+    tf = [by_flush.submit(r[0], *r[1:]) for r in reqs]
+    clock.t = 2.0
+    n_groups = len({t.group for t in td})
+    assert by_deadline.poll() == n_groups  # one deadline close per group
+    assert by_deadline.pending() == 0
+    by_flush.flush()
+    for a, b in zip(td, tf):
+        assert (a.group, a.index, a.cycle) == (b.group, b.index, b.cycle)
+        ra, rb = by_deadline.result(a), by_flush.result(b)
+        ra = ra if isinstance(ra, tuple) else (ra,)
+        rb = rb if isinstance(rb, tuple) else (rb,)
+        for xa, xb in zip(ra, rb):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_sharded_continuous_batching_matches_single_device_subprocess():
+    """Continuous batching (admit_max auto-close + double buffering) over a
+    4-way mesh agrees with the single-device engine on interpret-mode
+    pallas: the kernel kinds (append/kalman) bitwise — the padded grid per
+    shard is identical — and lstsq to roundoff (its padded vmap width
+    differs between mesh and no-mesh, so XLA may vectorize lanes
+    differently).  The async layers preserve the sharded-equals-single
+    contract."""
+    _run(
+        """
+        import numpy as np, jax
+        from repro.launch.serve_qr import make_workload
+        from repro.parallel.sharding import make_batch_mesh
+        from repro.serve import ContinuousBatcher, Dispatcher
+        assert jax.device_count() == 4, jax.device_count()
+        mesh = make_batch_mesh(4)
+        reqs = make_workload(19, n=6, rows=3, k=1, seed=56)
+
+        def engine(mesh):
+            return ContinuousBatcher(
+                Dispatcher(backend="pallas", interpret=True, mesh=mesh,
+                           max_batch=4, double_buffer=True),
+                admit_max=4, retain_cycles=None)
+
+        sharded, single = engine(mesh), engine(None)
+        ts = [sharded.submit(r[0], *r[1:]) for r in reqs]
+        t1 = [single.submit(r[0], *r[1:]) for r in reqs]
+        sharded.flush(); single.flush()
+        assert sharded.drain() >= 19 and single.drain() >= 19
+        for r, a, b in zip(reqs, ts, t1):
+            ra, rb = sharded.result(a), single.result(b)
+            ra = ra if isinstance(ra, tuple) else (ra,)
+            rb = rb if isinstance(rb, tuple) else (rb,)
+            for xa, xb in zip(ra, rb):
+                if r[0] == "lstsq":
+                    np.testing.assert_allclose(np.asarray(xa),
+                                               np.asarray(xb),
+                                               rtol=1e-6, atol=1e-6)
+                else:
+                    np.testing.assert_array_equal(np.asarray(xa),
+                                                  np.asarray(xb))
+        assert all(sharded.done_at(t) is not None for t in ts)
+        print("ASYNC_SHARDED_OK")
+        """
+    )

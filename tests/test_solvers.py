@@ -229,16 +229,14 @@ def test_triangularize_augmented_shape_protocol():
 # ------------------------------------------------------------------- serving
 
 def test_qr_server_round_trip():
-    from repro.launch.serve_qr import QRServer, make_workload
+    from repro.launch.serve_qr import QRServer, _submit_all, make_workload
+    from repro.solvers.kalman import KalmanState, kf_step
 
     reqs = make_workload(10, n=6, rows=3, k=1, seed=28)
+    # the mix must exercise all three kinds through one server
+    assert {r[0] for r in reqs} == {"append", "lstsq", "kalman"}
     server = QRServer(backend="pallas", max_batch=4, interpret=True)
-    tickets = []
-    for r in reqs:
-        if r[0] == "lstsq":
-            tickets.append(server.submit_lstsq(r[1], r[2]))
-        else:
-            tickets.append(server.submit_append(*r[1:]))
+    tickets = _submit_all(server, reqs)
     assert server.pending() == len(reqs)
     assert server.flush() == len(reqs)
     assert server.pending() == 0
@@ -248,6 +246,15 @@ def test_qr_server_round_trip():
             x, resid = server.result(tk)
             xo = np.linalg.lstsq(r[1], r[2], rcond=None)[0]
             np.testing.assert_allclose(np.asarray(x), xo, rtol=1e-3, atol=1e-4)
+        elif r[0] == "kalman":
+            Rn, dn = server.result(tk)
+            st = KalmanState(R=jnp.asarray(r[1]), d=jnp.asarray(r[2]),
+                             step=jnp.int32(0))
+            oracle = kf_step(st, *(jnp.asarray(a) for a in r[3:]))
+            np.testing.assert_allclose(np.asarray(Rn), np.asarray(oracle.R),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(dn), np.asarray(oracle.d),
+                                       rtol=1e-4, atol=1e-4)
         else:
             # no-rhs appends resolve to a bare R, rhs appends to (R, d) —
             # normalize both sides to tuples before comparing
