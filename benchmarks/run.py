@@ -413,9 +413,111 @@ def bench_blocked():
     return rows
 
 
+def bench_precision():
+    """Error-vs-throughput curves across precision policies.
+
+    For each graded problem (controlled condition number via
+    ``repro.testing.graded_matrix``) the blocked driver runs under the
+    ``f32`` and ``bf16`` (f32-accumulation) policies; each point records
+    achieved GFLOP/s next to the harness error metrics, so the artifact
+    answers "what does bf16 buy and what does it cost" in one table.  The
+    serving section records the dispatch-block scaling bf16 storage earns
+    (``Dispatcher.block_b_for``) per shape class plus measured ``QRServer``
+    flush throughput per store dtype.  Always writes
+    ``BENCH_precision.json``; ``--check`` asserts the documented error
+    budgets AND that bf16 storage rides >= 2x the f32 dispatch block on at
+    least one serving shape class.
+    """
+    import json
+
+    from repro.core.blocked import ggr_triangularize_blocked
+    from repro.launch.serve_qr import QRServer
+    from repro.obs import ggr_sweep_flops
+    from repro.serve import Dispatcher
+    from repro.testing import error_budget, factorization_errors, graded_matrix
+
+    rows, records, failures = [], [], []
+    shapes = [(96, 80)] if _CHECK else [(256, 192), (384, 256)]
+    conds = (1e0, 1e8) if _CHECK else (1e0, 1e4, 1e8)
+    reps, warmup = (1, 1) if _CHECK else (3, 1)
+    policies = [("f32", "float32"), ("bf16", "bfloat16")]
+    for m, n in shapes:
+        flops = ggr_sweep_flops(m, n, n)
+        for cond in conds:
+            A = graded_matrix(m, n, cond, seed=17)
+            A32 = jnp.asarray(A, jnp.float32)
+            for policy, dtype in policies:
+                t, R = _time(
+                    lambda x, p=policy: ggr_triangularize_blocked(
+                        x, precision=p),
+                    A32, reps=reps, warmup=warmup)
+                errs = factorization_errors(A, R)
+                gflops = flops / t / 1e3
+                gram = errs["gram_residual"]
+                rows.append(
+                    f"precision_{policy}_m{m}n{n}_cond{cond:.0e},{t:.0f},"
+                    f"gflops={gflops:.2f};gram={gram:.2e}")
+                records.append({"name": "blocked", "policy": policy,
+                                "m": m, "n": n, "cond": cond,
+                                "us_per_call": t, "gflops": gflops, **errs})
+                budget = error_budget(dtype, "gram_residual", m, n, cond)
+                if gram > budget:
+                    failures.append(f"{policy} {m}x{n} cond={cond:.0e}: "
+                                    f"gram {gram:.2e} > budget {budget:.2e}")
+
+    # serving: dispatch-block scaling per shape class + flush throughput
+    disp = Dispatcher(block_b=8)
+    block_ratios = {}
+    for kind in ("append", "lstsq", "kalman"):
+        b32 = disp.padded_chunk(1, kind, "float32")
+        b16 = disp.padded_chunk(1, kind, "bfloat16")
+        block_ratios[kind] = b16 / b32
+        rows.append(f"precision_block_{kind},0,f32={b32};bf16={b16}")
+        records.append({"name": "dispatch_block", "kind": kind,
+                        "padded_f32": b32, "padded_bf16": b16,
+                        "ratio": b16 / b32})
+    if not any(r >= 2.0 for r in block_ratios.values()):
+        failures.append(f"no serving shape class gives bf16 storage a >=2x "
+                        f"dispatch block (ratios {block_ratios})")
+
+    rng = np.random.default_rng(23)
+    nserve, pserve, breqs = 16, 4, 32
+    Rs = np.triu(rng.standard_normal((nserve, nserve))) + 2 * np.eye(nserve)
+    Us = rng.standard_normal((pserve, nserve))
+    for store, policy in (("float32", None), ("bfloat16", "bf16")):
+        server = QRServer(backend="pallas", interpret=True, precision=policy)
+        Rj = jnp.asarray(Rs, jnp.dtype(store))
+        Uj = jnp.asarray(Us, jnp.dtype(store))
+        for _ in range(breqs):  # warm the executable cache
+            server.submit_append(Rj, Uj)
+        server.flush()
+        server.drain()
+        t0 = time.perf_counter()
+        for _ in range(breqs):
+            server.submit_append(Rj, Uj)
+        server.flush()
+        server.drain()
+        dt = time.perf_counter() - t0
+        rps = breqs / dt
+        rows.append(f"precision_serve_{store},{dt * 1e6 / breqs:.0f},"
+                    f"reqs_per_s={rps:.0f}")
+        records.append({"name": "serve_append", "store_dtype": store,
+                        "policy": policy or "none", "n": nserve, "p": pserve,
+                        "reqs_per_s": rps})
+
+    out = {"bench": "bench_precision", "check": _CHECK, "results": records}
+    path = os.path.join(os.getcwd(), "BENCH_precision.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    rows.append(f"precision_json,0,path={path}")
+    if _CHECK and failures:
+        sys.exit("bench_precision --check FAILED: " + "; ".join(failures))
+    return rows
+
+
 BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels,
            bench_scaling, bench_update, bench_serve, bench_kalman,
-           bench_blocked]
+           bench_blocked, bench_precision]
 
 
 def main() -> None:

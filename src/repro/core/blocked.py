@@ -51,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.kernels.backend import resolve_interpret
+from repro.kernels.backend import Precision, resolve_interpret, resolve_precision
 from repro.kernels.ggr_apply import apply_factors_pallas
 from repro.kernels.ggr_panel import batched_geqrt_pallas, panel_factor_pallas
 from repro.kernels.ggr_update import batched_update_pallas, pad_to_tile
@@ -184,11 +184,28 @@ def _phase_schedule(m: int, b: int, nk: int):
     return phases
 
 
-def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
+def _gemm(lhs, rhs, accum_dtype):
+    """Batched tile GEMM; low-precision operands accumulate at accum_dtype.
+
+    ``accum_dtype=None`` is the legacy path (operand-dtype accumulation).
+    With an accumulation dtype the contraction asks XLA for wide partials
+    (``preferred_element_type``) and rounds the result back to tile dtype —
+    the GEMM analogue of the kernels' in-body accumulation policy.
+    """
+    if accum_dtype is None:
+        return jnp.einsum("pij,pjw->piw", lhs, rhs)
+    return jnp.einsum("pij,pjw->piw", lhs, rhs,
+                      preferred_element_type=jnp.dtype(accum_dtype)
+                      ).astype(lhs.dtype)
+
+
+def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret, accum_dtype=None):
     """One tree-scheduled panel: batched tile GEQRT -> log-depth coupling ->
     GEMM trailing updates, all on the (F, W) frame starting at the pivot row."""
     p = F // b
     dtype = Xp.dtype
+    prec = (None if accum_dtype is None
+            else Precision(str(dtype), accum_dtype, str(dtype)))
     eye = jnp.eye(b, dtype=dtype)
     c0 = k * b
     frame = jax.lax.dynamic_slice(Xp, (c0, 0), (F, W))
@@ -198,10 +215,11 @@ def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
     with obs.named_span("repro/blocked/panel"):
         tiles = jnp.concatenate([pan, jnp.broadcast_to(eye, (p, b, b))], axis=2)
         out0 = batched_geqrt_pallas(tiles, n_pivots=b,
-                                    block_b=block_b or p, interpret=interpret)
+                                    block_b=block_b or p, interpret=interpret,
+                                    precision=prec)
         R = out0[:, :, :b]
     with obs.named_span("repro/blocked/trailing"):
-        C = jnp.einsum("pij,pjw->piw", out0[:, :, b:], frame.reshape(p, b, W))
+        C = _gemm(out0[:, :, b:], frame.reshape(p, b, W), accum_dtype)
 
     # binary-tree coupling of the per-tile R factors (log2(p) rounds);
     # each round is ONE batched compact-active-set sweep + ONE batched GEMM
@@ -215,12 +233,12 @@ def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
                  jnp.concatenate([R[bi], Z, E], axis=2)], axis=1)
             out = batched_update_pallas(stacked, n_pivots=b,
                                         block_b=block_b or npair,
-                                        interpret=interpret)
+                                        interpret=interpret, precision=prec)
             R = R.at[ai].set(out[:, :b, :b])
             Qt = out[:, :, b:]  # (npair, 2b, 2b) node transform
         with obs.named_span("repro/blocked/trailing"):
             Ct = jnp.concatenate([C[ai], C[bi]], axis=1)
-            Ct = jnp.einsum("pij,pjw->piw", Qt, Ct)
+            Ct = _gemm(Qt, Ct, accum_dtype)
             C = C.at[ai].set(Ct[:, :b]).at[bi].set(Ct[:, b:])
 
     frame = C.reshape(F, W)
@@ -232,14 +250,18 @@ def _panel_step_tree(Xp, k, *, b, F, W, block_b, interpret):
     return jax.lax.dynamic_update_slice(Xp, frame, (c0, 0))
 
 
-def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret):
+def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret,
+                      accum_dtype=None):
     """One fused-scheduled panel: monolithic GEQRT kernel + one full-width
     DET2-grid apply launch (V/T resident across the width grid)."""
     c0 = k * b
+    prec = (None if accum_dtype is None
+            else Precision(str(Xp.dtype), accum_dtype, str(Xp.dtype)))
     frame = jax.lax.dynamic_slice(Xp, (c0, 0), (F, W))
     pan = jax.lax.dynamic_slice(frame, (0, c0), (F, b))
     with obs.named_span("repro/blocked/panel"):
-        Rp, V, T = panel_factor_pallas(pan, pivot0=0, interpret=interpret)
+        Rp, V, T = panel_factor_pallas(pan, pivot0=0, interpret=interpret,
+                                       precision=prec)
 
     bw = W if block_w is None else max(1, min(block_w, W))
     while W % bw:
@@ -248,7 +270,7 @@ def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret):
     def apply(fr):
         with obs.named_span("repro/blocked/trailing"):
             return apply_factors_pallas(V, T, fr, pivot0=0, block_w=bw,
-                                        interpret=interpret)
+                                        interpret=interpret, precision=prec)
 
     if pure_qr:
         # last panel of a pure QR has no trailing columns to update
@@ -262,10 +284,10 @@ def _panel_step_fused(Xp, k, *, b, F, W, nk, pure_qr, block_w, interpret):
 @functools.partial(
     jax.jit,
     static_argnames=("n_pivots", "tile", "schedule", "interpret",
-                     "block_w", "block_b"),
+                     "block_w", "block_b", "accum_dtype"),
 )
 def _triangularize_blocked_impl(X, n_pivots, tile, schedule, interpret,
-                                block_w, block_b):
+                                block_w, block_b, accum_dtype=None):
     m, w = X.shape
     b = min(tile, -(-n_pivots // 8) * 8)
     np_pad = -(-n_pivots // b) * b
@@ -293,11 +315,13 @@ def _triangularize_blocked_impl(X, n_pivots, tile, schedule, interpret,
     for s, e, F in phases:
         if schedule == "tree":
             body = functools.partial(_panel_step_tree, b=b, F=F, W=W,
-                                     block_b=block_b, interpret=interpret)
+                                     block_b=block_b, interpret=interpret,
+                                     accum_dtype=accum_dtype)
         else:
             body = functools.partial(_panel_step_fused, b=b, F=F, W=W, nk=nk,
                                      pure_qr=pure_qr, block_w=block_w,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     accum_dtype=accum_dtype)
         Xp = jax.lax.fori_loop(s, e, lambda k, Xc: body(Xc, k), Xp)
 
     out = Xp[:m]
@@ -310,7 +334,8 @@ def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
                               tile: int = 64, schedule: str = "auto",
                               interpret: bool | None = None,
                               block_w: int | None = None,
-                              block_b: int | None = None) -> jax.Array:
+                              block_b: int | None = None,
+                              precision=None) -> jax.Array:
     """Blocked GGR sweeps annihilating columns 0..n_pivots-1 below their
     diagonals; trailing columns (rhs) ride along as ``Q^T``-transformed data.
 
@@ -322,6 +347,13 @@ def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
     trailing — the MXU schedule), ``"fused"`` (monolithic panel kernel + one
     full-width DET2 apply launch — the VMEM-residency schedule), or
     ``"auto"``: tree on interpret/CPU backends, fused where Mosaic compiles.
+
+    precision: mixed-precision policy (``Precision`` / name / None).  The
+    input is cast to the policy's compute dtype at entry; suffix-norm and
+    DET2 accumulation inside the kernels — and the trailing-GEMM partials of
+    the tree schedule — run at the policy's (wider) accumulation dtype.  The
+    result is returned at compute dtype.  ``None`` keeps everything at the
+    input dtype (legacy, bit-identical).
     """
     m, w = X.shape
     if n_pivots is None:
@@ -332,24 +364,36 @@ def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
         raise ValueError(f"unknown schedule {schedule!r}")
     itp = resolve_interpret(interpret)
     sched = schedule if schedule != "auto" else ("tree" if itp else "fused")
+    accum_dtype = None
+    if precision is not None:
+        prec = resolve_precision(precision)
+        X = X.astype(prec.compute)
+        accum_dtype = prec.accum_dtype
     rec = obs.enabled() and not isinstance(X, jax.core.Tracer)
     if not rec:
         return _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
-                                           block_w, block_b)
+                                           block_w, block_b,
+                                           accum_dtype=accum_dtype)
     with obs.span("repro/blocked/triangularize"):
         t0 = time.perf_counter()
         out = _triangularize_blocked_impl(X, n_pivots, tile, sched, itp,
-                                          block_w, block_b)
+                                          block_w, block_b,
+                                          accum_dtype=accum_dtype)
         jax.block_until_ready(out)
-        obs.record_dispatch("blocked", obs.ggr_sweep_flops(m, w, n_pivots),
-                            time.perf_counter() - t0, schedule=sched)
+        sweep_flops = obs.ggr_sweep_flops(m, w, n_pivots)
+        obs.record_dispatch("blocked", sweep_flops,
+                            time.perf_counter() - t0, schedule=sched,
+                            by_dtype=obs.flops_by_dtype(
+                                sweep_flops, str(X.dtype), accum_dtype),
+                            precision=str(X.dtype))
     return out
 
 
 def ggr_qr_blocked(A: jax.Array, tile: int = 64, schedule: str = "auto",
                    interpret: bool | None = None,
                    block_w: int | None = None,
-                   block_b: int | None = None) -> jax.Array:
+                   block_b: int | None = None,
+                   precision=None) -> jax.Array:
     """Blocked GGR QR of an arbitrary (m, n) matrix; returns the (m, n) R.
 
     Panel pipeline over the Pallas GEQRT/DET2 kernels with tree-coupled row
@@ -361,5 +405,5 @@ def ggr_qr_blocked(A: jax.Array, tile: int = 64, schedule: str = "auto",
         return jnp.triu(A)
     R = ggr_triangularize_blocked(A, min(m, n), tile=tile, schedule=schedule,
                                   interpret=interpret, block_w=block_w,
-                                  block_b=block_b)
+                                  block_b=block_b, precision=precision)
     return jnp.triu(R)

@@ -24,6 +24,7 @@ __all__ = [
     "ggr_sweep_mults",
     "ggr_append_mults",
     "mults_to_flops",
+    "flops_by_dtype",
     "householder_qr2_mults",
     "count_mults",
     "MultCount",
@@ -83,6 +84,27 @@ def mults_to_flops(mults: int) -> int:
     """Model mults -> flops: each counted multiplication pairs with one
     add/subtract in the DOTk/DET2 macro-op grids (FMA-shaped throughout)."""
     return 2 * int(mults)
+
+
+def flops_by_dtype(mults: int, compute_dtype="float32",
+                   accum_dtype=None) -> dict[str, int]:
+    """Split the FMA-shaped flop census by the dtype each half executes in.
+
+    Under the mixed-precision policy each counted multiplication runs at
+    the tile's *compute* dtype while its paired add lands in the
+    *accumulator* dtype (``kernels.Precision``), so a uniform 2x conversion
+    mislabels half the work — a bf16-tile dispatch is m bf16 flops plus m
+    f32 flops, not 2m of either.  Returns ``{dtype_name: flops}`` whose
+    values always sum to ``mults_to_flops(mults)``; uniform policies
+    (``accum_dtype`` None or equal) collapse to one entry.  ``mults`` may
+    be a :class:`MultCount` — the split is exact iff the census was.
+    """
+    cd = str(jnp.dtype(compute_dtype).name)
+    ad = cd if accum_dtype is None else str(jnp.dtype(accum_dtype).name)
+    m = int(mults)
+    out = {cd: m}
+    out[ad] = out.get(ad, 0) + m
+    return out
 
 
 def _dot_general_mults(eqn) -> int:

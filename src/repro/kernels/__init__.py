@@ -14,16 +14,19 @@ kernels:
 """
 from .ggr_update import pad_batch, pad_to_tile
 from .ops import (
+    Precision,
     apply_panel,
     batched_geqrt,
     batched_update,
     default_interpret,
     ggr_qr_pallas,
     panel_qr,
+    resolve_precision,
     tsqrt,
 )
 
 __all__ = [
+    "Precision",
     "apply_panel",
     "batched_geqrt",
     "batched_update",
@@ -32,5 +35,6 @@ __all__ = [
     "pad_batch",
     "pad_to_tile",
     "panel_qr",
+    "resolve_precision",
     "tsqrt",
 ]

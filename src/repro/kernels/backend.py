@@ -16,12 +16,15 @@ the resolved value — never ``None`` — is the jit cache key.
 from __future__ import annotations
 
 import os
+from typing import NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.obs import _state as _obs_state
 
-__all__ = ["default_interpret", "resolve_interpret"]
+__all__ = ["default_interpret", "resolve_interpret",
+           "Precision", "resolve_precision"]
 
 
 def default_interpret() -> bool:
@@ -50,3 +53,112 @@ def resolve_interpret(interpret: bool | None) -> bool:
         reg.counter("kernels.interpret_resolutions",
                     mode="interpret" if itp else "compiled").inc()
     return itp
+
+
+class Precision(NamedTuple):
+    """Mixed-precision policy for the GGR kernels and drivers.
+
+    Dtypes are stored as canonical *names* (``"float32"``, ``"bfloat16"``,
+    ...) so a ``Precision`` is hashable and can ride through ``jit`` as a
+    static argument without tripping on dtype-object identity.
+
+    - ``compute_dtype``: tile element dtype — the DET2 grid multiplies and
+      trailing GEMMs run at this width.
+    - ``accum_dtype``: suffix-norm / rotation-coefficient accumulation dtype
+      inside kernel bodies (``_revcumsum`` ladders, ``t``/``k``/``l``
+      chains).  Must be at least as wide as ``compute_dtype``.
+    - ``store_dtype``: at-rest dtype for serving-side ``(R, d)`` states.
+      2-byte storage halves VMEM residency, which is why the serving layer
+      doubles ``block_b`` for it.
+    """
+
+    compute_dtype: str = "float32"
+    accum_dtype: str = "float32"
+    store_dtype: str = "float32"
+
+    @property
+    def compute(self) -> jnp.dtype:
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum(self) -> jnp.dtype:
+        return jnp.dtype(self.accum_dtype)
+
+    @property
+    def store(self) -> jnp.dtype:
+        return jnp.dtype(self.store_dtype)
+
+    @property
+    def is_mixed(self) -> bool:
+        return self.compute_dtype != self.accum_dtype
+
+
+_CANON = {
+    "f64": "float64", "float64": "float64", "double": "float64",
+    "f32": "float32", "float32": "float32", "single": "float32",
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "f16": "float16", "float16": "float16", "half": "float16",
+}
+
+# Named policies: low-precision tiles always accumulate in float32 (the
+# paper-side claim this PR tests), full-precision policies are uniform.
+_ALIASES = {
+    "float64": Precision("float64", "float64", "float64"),
+    "float32": Precision("float32", "float32", "float32"),
+    "bfloat16": Precision("bfloat16", "float32", "bfloat16"),
+    "float16": Precision("float16", "float32", "float16"),
+}
+_ALIASES["mixed_bf16"] = _ALIASES["bfloat16"]
+_ALIASES["mixed_f16"] = _ALIASES["float16"]
+
+DEFAULT_PRECISION = _ALIASES["float32"]
+
+
+def resolve_precision(precision: "Precision | str | None") -> Precision:
+    """Resolve a ``precision`` argument to a validated :class:`Precision`.
+
+    ``None`` means the uniform float32 policy (the pre-existing behaviour,
+    bit-identical kernels).  Strings name a policy: ``"f32"``/``"f64"`` are
+    uniform; ``"bf16"``/``"f16"`` (and the explicit ``"mixed_bf16"`` /
+    ``"mixed_f16"`` spellings) select low-precision tiles with float32
+    accumulation.  A ``Precision`` passes through after canonicalization.
+
+    Raises ``ValueError`` for unknown names or an ``accum_dtype`` narrower
+    than ``compute_dtype`` (accumulating below tile precision defeats the
+    error model every bound in ``docs/precision.md`` is stated under).
+    """
+    if precision is None:
+        prec = DEFAULT_PRECISION
+    elif isinstance(precision, str):
+        key = _CANON.get(precision, precision)
+        try:
+            prec = _ALIASES[key]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision policy {precision!r}; expected one of "
+                f"{sorted(set(_CANON) | {'mixed_bf16', 'mixed_f16'})} "
+                "or a Precision instance") from None
+    elif isinstance(precision, Precision):
+        names = []
+        for field in precision:
+            if field in _CANON:
+                names.append(_CANON[field])
+                continue
+            try:
+                names.append(str(jnp.dtype(field).name))
+            except TypeError:
+                raise ValueError(
+                    f"unrecognized dtype {field!r} in {precision}") from None
+        prec = Precision(*names)
+    else:
+        raise TypeError(
+            f"precision must be None, str, or Precision; got {precision!r}")
+    if jnp.promote_types(prec.compute, prec.accum) != prec.accum:
+        raise ValueError(
+            f"accum_dtype {prec.accum_dtype!r} is narrower than "
+            f"compute_dtype {prec.compute_dtype!r}")
+    reg = _obs_state._active()
+    if reg.enabled:
+        reg.counter("kernels.precision_resolutions",
+                    compute=prec.compute_dtype, accum=prec.accum_dtype).inc()
+    return prec

@@ -19,17 +19,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
-from .ggr_panel import _EPS, _revcumsum
+from .backend import resolve_interpret, resolve_precision
+from .ggr_panel import _EPS, _accum_dt, _revcumsum
 
 __all__ = ["apply_factors_pallas"]
 
 
-def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool):
+def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool,
+                  accum_dtype: str | None = None):
     V = v_ref[...]
     T = t_ref[...]
     C = c_ref[...]
     m, b = V.shape
+    cd = C.dtype
+    ad = _accum_dt(C, accum_dtype)
     rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (b,), 0)
 
@@ -41,9 +44,11 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool):
             onehot = (cols == c).astype(C.dtype)
             v = V @ onehot  # (m,) one-hot extract
             t = T @ onehot
+        v = v.astype(ad)
+        t = t.astype(ad)
         pivot = pivot0 + c
 
-        prod = v[:, None] * C
+        prod = v[:, None] * C.astype(ad)
         P = _revcumsum(prod, native=native)  # inclusive suffix sum
         # exclusive suffix via shift (P - prod would cancel catastrophically)
         S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
@@ -59,13 +64,13 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool):
             t_piv = jax.lax.dynamic_slice_in_dim(t, pivot, 1, axis=0)[0]
             P_piv = jax.lax.dynamic_slice_in_dim(P, pivot, 1, axis=0)[0]
         else:
-            piv_onehot = (rows == pivot).astype(C.dtype)
+            piv_onehot = (rows == pivot).astype(ad)
             t_piv = (t * piv_onehot).sum()
             P_piv = piv_onehot @ P
-        pivot_new = P_piv / jnp.where(t_piv > _EPS, t_piv, 1.0)
+        pivot_new = (P_piv / jnp.where(t_piv > _EPS, t_piv, 1.0)).astype(cd)
 
-        det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * C[:-1, :]
-        det2 = jnp.where(valid[:-1, None], det2, C[1:, :])
+        det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * C[:-1, :].astype(ad)
+        det2 = jnp.where(valid[:-1, None], det2.astype(cd), C[1:, :])
         cand_below = jnp.concatenate([C[:1, :], det2], axis=0)
 
         rr = rows[:, None]
@@ -78,14 +83,17 @@ def _apply_kernel(v_ref, t_ref, c_ref, o_ref, *, pivot0: int, native: bool):
     o_ref[...] = jax.lax.fori_loop(0, b, body, C)
 
 
-@functools.partial(jax.jit, static_argnames=("pivot0", "block_w", "interpret"))
+@functools.partial(jax.jit, static_argnames=("pivot0", "block_w", "interpret",
+                                             "accum_dtype"))
 def _apply_factors_call(V: jax.Array, T: jax.Array, C: jax.Array,
-                        pivot0: int, block_w: int, interpret: bool):
+                        pivot0: int, block_w: int, interpret: bool,
+                        accum_dtype: str | None = None):
     m, b = V.shape
     w = C.shape[1]
     bw = min(block_w, w)
     assert w % bw == 0, "pad trailing width to the block multiple"
-    kern = functools.partial(_apply_kernel, pivot0=pivot0, native=interpret)
+    kern = functools.partial(_apply_kernel, pivot0=pivot0, native=interpret,
+                             accum_dtype=accum_dtype)
     return pl.pallas_call(
         kern,
         grid=(w // bw,),
@@ -107,10 +115,19 @@ def apply_factors_pallas(
     pivot0: int = 0,
     block_w: int = 256,
     interpret: bool | None = None,
+    precision=None,
 ):
     """Apply b stored GGR transforms to trailing columns C ((m, w)).
 
     ``interpret=None`` resolves via ``backend.default_interpret()``.
+    ``precision`` selects tile compute + accumulation dtypes (``None`` =
+    legacy: everything at the operands' own dtype).
     """
-    return _apply_factors_call(V, T, C, pivot0, block_w,
-                               resolve_interpret(interpret))
+    if precision is None:
+        return _apply_factors_call(V, T, C, pivot0, block_w,
+                                   resolve_interpret(interpret))
+    prec = resolve_precision(precision)
+    return _apply_factors_call(V.astype(prec.compute), T.astype(prec.compute),
+                               C.astype(prec.compute), pivot0, block_w,
+                               resolve_interpret(interpret),
+                               accum_dtype=prec.accum_dtype)

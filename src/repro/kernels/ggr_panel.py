@@ -37,11 +37,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
+from .backend import resolve_interpret, resolve_precision
 
 __all__ = ["panel_factor_pallas", "batched_geqrt_pallas"]
 
 _EPS = 1e-30
+
+
+def _accum_dt(X: jax.Array, accum_dtype: str | None) -> jnp.dtype:
+    """Accumulation dtype for a kernel body: ``accum_dtype`` or X's own.
+
+    ``None`` keeps the historical behaviour — everything at tile dtype — so
+    the uniform-precision path is bit-identical to the pre-precision kernels.
+    """
+    return X.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
 
 
 def _revcumsum(x: jax.Array, axis: int = 0, native: bool = False) -> jax.Array:
@@ -69,23 +78,30 @@ def _revcumsum(x: jax.Array, axis: int = 0, native: bool = False) -> jax.Array:
     return x
 
 
-def _ggr_column_update(X, col_onehot, pivot_row, rows, native=False):
+def _ggr_column_update(X, col_onehot, pivot_row, rows, native=False,
+                       accum_dtype=None):
     """One fused GGR column step on X (m, n); returns updated X and (v, t).
 
     The column is scaled by its max-abs before the norm/coefficient math
     (safe-Givens, ref [26] of the paper); all update formulas are
     scale-invariant so no rescaling of the trailing matrix is needed.
     Returned (v, t) are the SCALED factors; sigma restores the diagonal.
+
+    ``accum_dtype`` widens the suffix-norm ``_revcumsum`` ladders and the
+    rotation-coefficient chain (t, k, l, DET2) while the tile X stays at its
+    own (possibly bf16) dtype; ``None`` keeps everything at tile dtype.
     """
     m = X.shape[0]
+    cd = X.dtype
+    ad = _accum_dt(X, accum_dtype)
     col = (X * col_onehot[None, :]).sum(axis=1)  # one-hot extract (MXU/VPU)
-    v = jnp.where(rows >= pivot_row, col, 0.0)
+    v = jnp.where(rows >= pivot_row, col, 0.0).astype(ad)
     sigma = jnp.max(jnp.abs(v))
     v = v / jnp.where(sigma > 0, sigma, 1.0)
     t2 = _revcumsum((v * v)[:, None], native=native)[:, 0]
     t = jnp.sqrt(t2)
 
-    prod = v[:, None] * X
+    prod = v[:, None] * X.astype(ad)
     P = _revcumsum(prod, native=native)  # P_i = sum_{r>=i} (inclusive)
     # exclusive suffix via shift (P - prod would cancel catastrophically)
     S = jnp.concatenate([P[1:], jnp.zeros_like(P[:1])], axis=0)
@@ -98,13 +114,13 @@ def _ggr_column_update(X, col_onehot, pivot_row, rows, native=False):
     l = safe_tn / safe_t
 
     # pivot row extracted via one-hot contraction (no dynamic lane slicing):
-    piv_onehot = (rows == pivot_row).astype(X.dtype)
+    piv_onehot = (rows == pivot_row).astype(ad)
     t_piv = (t * piv_onehot).sum()
     pivot_vals = piv_onehot @ P  # (n,) row-1 DOT of eq. 2
-    pivot_new = pivot_vals / jnp.where(t_piv > _EPS, t_piv, 1.0)
+    pivot_new = (pivot_vals / jnp.where(t_piv > _EPS, t_piv, 1.0)).astype(cd)
 
-    det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * X[:-1, :]
-    det2 = jnp.where(valid[:-1, None], det2, X[1:, :])
+    det2 = k[:-1, None] * S[:-1, :] - l[:-1, None] * X[:-1, :].astype(ad)
+    det2 = jnp.where(valid[:-1, None], det2.astype(cd), X[1:, :])
     cand_below = jnp.concatenate([X[:1, :], det2], axis=0)
 
     rr = rows[:, None]
@@ -113,10 +129,11 @@ def _ggr_column_update(X, col_onehot, pivot_row, rows, native=False):
         rr < pivot_row, X, jnp.where(rr == pivot_row, pivot_new[None, :], cand_below)
     )
     out = jnp.where(do_any, out, X)
-    return out, v, t, do_any, sigma
+    return out, v.astype(cd), t.astype(cd), do_any, sigma.astype(cd)
 
 
-def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int, native: bool):
+def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int, native: bool,
+                  accum_dtype: str | None = None):
     X = a_ref[...]
     m, b = X.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (m,), 0)
@@ -126,7 +143,7 @@ def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int, native: bool):
         X, V, T = carry
         onehot = (cols == c).astype(X.dtype)
         Xn, v, t, do_any, sigma = _ggr_column_update(
-            X, onehot, pivot0 + c, rows, native=native
+            X, onehot, pivot0 + c, rows, native=native, accum_dtype=accum_dtype
         )
         # write the annihilated column exactly: sigma·t[pivot] at pivot, 0 below
         tp = sigma * (t * (rows == pivot0 + c)).sum()
@@ -145,10 +162,13 @@ def _panel_kernel(a_ref, r_ref, v_ref, t_ref, *, pivot0: int, native: bool):
     t_ref[...] = T
 
 
-@functools.partial(jax.jit, static_argnames=("pivot0", "interpret"))
-def _panel_factor_call(panel: jax.Array, pivot0: int, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("pivot0", "interpret", "accum_dtype"))
+def _panel_factor_call(panel: jax.Array, pivot0: int, interpret: bool,
+                       accum_dtype: str | None = None):
     m, b = panel.shape
-    kern = functools.partial(_panel_kernel, pivot0=pivot0, native=interpret)
+    kern = functools.partial(_panel_kernel, pivot0=pivot0, native=interpret,
+                             accum_dtype=accum_dtype)
     out_shapes = (
         jax.ShapeDtypeStruct((m, b), panel.dtype),
         jax.ShapeDtypeStruct((m, b), panel.dtype),
@@ -168,21 +188,32 @@ def _panel_factor_call(panel: jax.Array, pivot0: int, interpret: bool):
 
 
 def panel_factor_pallas(panel: jax.Array, pivot0: int = 0,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, precision=None):
     """Factor an (m, b) panel in one fused VMEM-resident Pallas kernel.
 
     ``interpret=None`` resolves via ``backend.default_interpret()`` — True
     only on CPU hosts, so TPU/GPU backends compile the Mosaic kernel.
+    ``precision`` (``Precision`` / policy name / None) selects the tile
+    compute dtype and the in-kernel accumulation dtype; ``None`` keeps the
+    panel at its own dtype with same-width accumulation (legacy behaviour).
     """
-    return _panel_factor_call(panel, pivot0, resolve_interpret(interpret))
+    if precision is None:
+        return _panel_factor_call(panel, pivot0, resolve_interpret(interpret))
+    prec = resolve_precision(precision)
+    return _panel_factor_call(panel.astype(prec.compute), pivot0,
+                              resolve_interpret(interpret),
+                              accum_dtype=prec.accum_dtype)
 
 
 # ---------------------------------------------------------------------------
 # Batched dense GEQRT sweeps (the blocked driver's tile kernel)
 # ---------------------------------------------------------------------------
-def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
+def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool,
+                          accum_dtype: str | None = None):
     X = x_ref[...]  # (bb, t, w) — this grid step's tiles
     bb, t, w = X.shape
+    cd = X.dtype
+    ad = _accum_dt(X, accum_dtype)
     rows = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
 
@@ -192,12 +223,12 @@ def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
         else:
             oh = (cols == c).astype(X.dtype)
             v = jnp.einsum("btw,w->bt", X, oh)
-        v = jnp.where(rows[None, :] >= c, v, 0.0)
+        v = jnp.where(rows[None, :] >= c, v, 0.0).astype(ad)
         sigma = jnp.max(jnp.abs(v), axis=1, keepdims=True)  # safe-Givens scale
         vs = v / jnp.where(sigma > 0, sigma, 1.0)
         ts = jnp.sqrt(_revcumsum(vs * vs, axis=1, native=native))
 
-        prod = vs[:, :, None] * X
+        prod = vs[:, :, None] * X.astype(ad)
         P = _revcumsum(prod, axis=1, native=native)  # inclusive suffix dots
         # exclusive suffix via shift (P - prod cancels catastrophically)
         S = jnp.concatenate([P[:, 1:], jnp.zeros_like(P[:, :1])], axis=1)
@@ -213,14 +244,14 @@ def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
             t_piv = jax.lax.dynamic_slice_in_dim(ts, c, 1, axis=1)[:, 0]
             P_piv = jax.lax.dynamic_slice_in_dim(P, c, 1, axis=1)[:, 0]
         else:
-            piv = (rows == c).astype(X.dtype)
+            piv = (rows == c).astype(ad)
             t_piv = ts @ piv
             P_piv = jnp.einsum("r,brw->bw", piv, P)
         do_any = t_piv > _EPS
-        pivot_new = P_piv / jnp.where(do_any, t_piv, 1.0)[:, None]
+        pivot_new = (P_piv / jnp.where(do_any, t_piv, 1.0)[:, None]).astype(cd)
 
-        det2 = k[:, :-1, None] * S[:, :-1] - l[:, :-1, None] * X[:, :-1]
-        det2 = jnp.where(valid[:, :-1, None], det2, X[:, 1:])
+        det2 = k[:, :-1, None] * S[:, :-1] - l[:, :-1, None] * X[:, :-1].astype(ad)
+        det2 = jnp.where(valid[:, :-1, None], det2.astype(cd), X[:, 1:])
         cand_below = jnp.concatenate([X[:, :1], det2], axis=1)
 
         rr = rows[None, :, None]
@@ -232,7 +263,8 @@ def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
             oldcol = jax.lax.dynamic_slice_in_dim(out, c, 1, axis=2)[..., 0]
         else:
             oldcol = jnp.einsum("btw,w->bt", out, oh)
-        newcol = jnp.where(rows[None, :] == c, (sigma[:, 0] * t_piv)[:, None],
+        newcol = jnp.where(rows[None, :] == c,
+                           (sigma[:, 0] * t_piv).astype(cd)[:, None],
                            jnp.where(rows[None, :] < c, oldcol, 0.0))
         newcol = jnp.where(do_any[:, None], newcol, oldcol)
         if native:
@@ -244,9 +276,10 @@ def _batched_geqrt_kernel(x_ref, o_ref, *, n_pivots: int, native: bool):
     o_ref[...] = jax.lax.fori_loop(0, n_pivots, body, X)
 
 
-@functools.partial(jax.jit, static_argnames=("n_pivots", "block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_pivots", "block_b",
+                                             "interpret", "accum_dtype"))
 def _batched_geqrt_call(tiles: jax.Array, n_pivots: int, block_b: int,
-                        interpret: bool):
+                        interpret: bool, accum_dtype: str | None = None):
     from .ggr_update import pad_batch  # deferred: sibling-module edge
 
     B, t, w = tiles.shape
@@ -254,7 +287,7 @@ def _batched_geqrt_call(tiles: jax.Array, n_pivots: int, block_b: int,
     padded = pad_batch(tiles, bb)
     Bpad = padded.shape[0]
     kern = functools.partial(_batched_geqrt_kernel, n_pivots=n_pivots,
-                             native=interpret)
+                             native=interpret, accum_dtype=accum_dtype)
     out = pl.pallas_call(
         kern,
         grid=(Bpad // bb,),
@@ -267,7 +300,7 @@ def _batched_geqrt_call(tiles: jax.Array, n_pivots: int, block_b: int,
 
 
 def batched_geqrt_pallas(tiles: jax.Array, n_pivots: int, block_b: int = 8,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None, precision=None):
     """Dense GEQRT sweep of a (B, t, w) tile batch, one fused launch.
 
     Each tile's first ``n_pivots`` columns are triangularized (pivot row c for
@@ -279,6 +312,14 @@ def batched_geqrt_pallas(tiles: jax.Array, n_pivots: int, block_b: int = 8,
     All-zero tiles are exact fixed points (every divisor is eps-guarded), so
     padding tiles — and the zero row-tiles of a taller-than-the-matrix frame —
     come back bit-identical with ``Qt = I``.
+
+    ``precision`` selects tile compute dtype + in-kernel accumulation dtype
+    (``None`` = legacy: tiles at their own dtype, same-width accumulation).
     """
-    return _batched_geqrt_call(tiles, n_pivots, block_b,
-                               resolve_interpret(interpret))
+    if precision is None:
+        return _batched_geqrt_call(tiles, n_pivots, block_b,
+                                   resolve_interpret(interpret))
+    prec = resolve_precision(precision)
+    return _batched_geqrt_call(tiles.astype(prec.compute), n_pivots, block_b,
+                               resolve_interpret(interpret),
+                               accum_dtype=prec.accum_dtype)

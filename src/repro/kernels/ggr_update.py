@@ -38,8 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .backend import resolve_interpret
-from .ggr_panel import _EPS, _revcumsum
+from .backend import resolve_interpret, resolve_precision
+from .ggr_panel import _EPS, _accum_dt, _revcumsum
 
 __all__ = ["batched_update_pallas", "pad_batch", "pad_to_tile"]
 
@@ -88,9 +88,12 @@ def pad_to_tile(x: jax.Array, tiles, axes=None) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False):
+def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False,
+                           accum_dtype: str | None = None):
     X = x_ref[...]  # (bb, n_top + p, w) — this grid step's stacked problems
     bb, m, w = X.shape
+    cd = X.dtype
+    ad = _accum_dt(X, accum_dtype)
     n_top = n_pivots
     Xt, Xu = X[:, :n_top, :], X[:, n_top:, :]  # R|d rows, appended rows
     rows_t = jax.lax.broadcasted_iota(jnp.int32, (n_top,), 0)
@@ -110,11 +113,12 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False)
         else:
             onehot = (cols == c).astype(X.dtype)
             v = A @ onehot  # (bb, p+1) — active column: [R_cc; U[:, c]]
+        v = v.astype(ad)
         sigma = jnp.max(jnp.abs(v), axis=1, keepdims=True)  # safe-Givens scale
         v = v / jnp.where(sigma > 0, sigma, 1.0)
         t = jnp.sqrt(_revcumsum(v * v, axis=1, native=native))
 
-        prod = v[..., None] * A
+        prod = v[..., None] * A.astype(ad)
         P = _revcumsum(prod, axis=1, native=native)  # inclusive suffix dots
         # exclusive suffix via shift (P - prod cancels catastrophically)
         S = jnp.concatenate([P[:, 1:], jnp.zeros_like(P[:, :1])], axis=1)
@@ -128,14 +132,15 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False)
 
         t_piv = t[:, 0]  # pivot is row 0 of the active block
         do_any = t_piv > _EPS
-        pivot_new = P[:, 0] / jnp.where(do_any, t_piv, 1.0)[:, None]
+        pivot_new = (P[:, 0] / jnp.where(do_any, t_piv, 1.0)[:, None]).astype(cd)
 
-        det2 = k[:, :-1, None] * S[:, :-1] - l[:, :-1, None] * A[:, :-1]
-        det2 = jnp.where(valid[:, :-1, None], det2, A[:, 1:])
+        det2 = k[:, :-1, None] * S[:, :-1] - l[:, :-1, None] * A[:, :-1].astype(ad)
+        det2 = jnp.where(valid[:, :-1, None], det2.astype(cd), A[:, 1:])
         A_new = jnp.concatenate([pivot_new[:, None, :], det2], axis=1)
         # annihilated column written exactly: sigma·t at the pivot, 0 below
         newcol = jnp.concatenate(
-            [(sigma * t_piv[:, None]), jnp.zeros((bb, A.shape[1] - 1), X.dtype)],
+            [(sigma * t_piv[:, None]).astype(cd),
+             jnp.zeros((bb, A.shape[1] - 1), X.dtype)],
             axis=1,
         )
         if native:
@@ -156,9 +161,11 @@ def _batched_update_kernel(x_ref, o_ref, *, n_pivots: int, native: bool = False)
     o_ref[...] = jnp.concatenate([Xt, Xu], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("n_pivots", "block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_pivots", "block_b", "interpret",
+                                             "accum_dtype"))
 def _batched_update_call(stacked: jax.Array, n_pivots: int,
-                         block_b: int, interpret: bool):
+                         block_b: int, interpret: bool,
+                         accum_dtype: str | None = None):
     """Triangularize the first ``n_pivots`` columns of each stacked problem.
 
     stacked: (B, n_pivots + p, w) batch of ``[R | d; U | Y]`` matrices, R
@@ -178,7 +185,7 @@ def _batched_update_call(stacked: jax.Array, n_pivots: int,
     padded = pad_batch(stacked, bb)
     Bpad = padded.shape[0]
     kern = functools.partial(_batched_update_kernel, n_pivots=n_pivots,
-                             native=interpret)
+                             native=interpret, accum_dtype=accum_dtype)
     out = pl.pallas_call(
         kern,
         grid=(Bpad // bb,),
@@ -191,12 +198,20 @@ def _batched_update_call(stacked: jax.Array, n_pivots: int,
 
 
 def batched_update_pallas(stacked: jax.Array, n_pivots: int,
-                          block_b: int = 8, interpret: bool | None = None):
+                          block_b: int = 8, interpret: bool | None = None,
+                          precision=None):
     """Batched row-append sweep; see ``_batched_update_call`` for semantics.
 
     ``interpret=None`` resolves via ``backend.default_interpret()`` (True only
     on CPU hosts) before entering the jitted core, so the resolved value —
-    never ``None`` — is the jit cache key.
+    never ``None`` — is the jit cache key.  ``precision`` selects tile compute
+    + in-kernel accumulation dtypes (``None`` = legacy: the stacked batch at
+    its own dtype with same-width accumulation).
     """
-    return _batched_update_call(stacked, n_pivots, block_b,
-                                resolve_interpret(interpret))
+    if precision is None:
+        return _batched_update_call(stacked, n_pivots, block_b,
+                                    resolve_interpret(interpret))
+    prec = resolve_precision(precision)
+    return _batched_update_call(stacked.astype(prec.compute), n_pivots,
+                                block_b, resolve_interpret(interpret),
+                                accum_dtype=prec.accum_dtype)

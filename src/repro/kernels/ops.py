@@ -13,13 +13,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .backend import default_interpret, resolve_interpret
+from .backend import (Precision, default_interpret, resolve_interpret,
+                      resolve_precision)
 from .ggr_apply import apply_factors_pallas
 from .ggr_panel import batched_geqrt_pallas, panel_factor_pallas
 from .ggr_update import batched_update_pallas
 
 __all__ = [
     "default_interpret",
+    "Precision",
+    "resolve_precision",
     "panel_qr",
     "apply_panel",
     "batched_geqrt",
@@ -29,19 +32,22 @@ __all__ = [
 ]
 
 
-def panel_qr(panel: jax.Array, pivot0: int = 0, interpret: bool | None = None):
+def panel_qr(panel: jax.Array, pivot0: int = 0, interpret: bool | None = None,
+             precision=None):
     """(R, V, T) = fused GGR factorization of an (m, b) panel."""
-    return panel_factor_pallas(panel, pivot0=pivot0, interpret=interpret)
+    return panel_factor_pallas(panel, pivot0=pivot0, interpret=interpret,
+                               precision=precision)
 
 
-def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256, interpret: bool | None = None):
+def apply_panel(V, T, C, pivot0: int = 0, block_w: int = 256,
+                interpret: bool | None = None, precision=None):
     """Replay a factored panel's b transforms over trailing columns C."""
     return apply_factors_pallas(V, T, C, pivot0=pivot0, block_w=block_w,
-                                interpret=interpret)
+                                interpret=interpret, precision=precision)
 
 
 def batched_geqrt(tiles: jax.Array, n_pivots: int, block_b: int = 8,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, precision=None):
     """Batched dense GEQRT sweeps over a (B, t, w) tile batch.
 
     Triangularizes the first ``n_pivots`` columns of every tile; extra
@@ -49,11 +55,11 @@ def batched_geqrt(tiles: jax.Array, n_pivots: int, block_b: int = 8,
     transform Qt).  The blocked QR driver's tile kernel.
     """
     return batched_geqrt_pallas(tiles, n_pivots=n_pivots, block_b=block_b,
-                                interpret=interpret)
+                                interpret=interpret, precision=precision)
 
 
 def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, precision=None):
     """Batched row-append sweep: triangularize n_pivots columns per problem.
 
     Any batch size is accepted: non-``block_b``-multiple batches are padded
@@ -61,7 +67,7 @@ def batched_update(stacked: jax.Array, n_pivots: int, block_b: int = 8,
     the grid always runs at full ``block_b`` granularity.
     """
     return batched_update_pallas(stacked, n_pivots=n_pivots, block_b=block_b,
-                                 interpret=interpret)
+                                 interpret=interpret, precision=precision)
 
 
 def tsqrt(R_top: jax.Array, B: jax.Array, interpret: bool | None = None):

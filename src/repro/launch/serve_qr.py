@@ -98,13 +98,14 @@ class QRServer:
     mesh: object | None = None   # jax.sharding.Mesh; object-typed to keep the
     mesh_axis: str = "batch"     # dataclass importable before jax device init
     block_b: int = 8
+    precision: object | None = None  # Precision | policy name | None
 
     def __post_init__(self):
         self._engine = ContinuousBatcher(
             Dispatcher(backend=self.backend, max_batch=self.max_batch,
                        interpret=self.interpret, mesh=self.mesh,
                        mesh_axis=self.mesh_axis, block_b=self.block_b,
-                       double_buffer=False),
+                       double_buffer=False, precision=self.precision),
             admit_max=None, retain_cycles=1)
 
     # -------------------------------------------------- legacy introspection

@@ -47,12 +47,14 @@ from .export import (
     write_prometheus,
 )
 from .flops import (
+    flops_by_dtype,
     ggr_append_flops,
     ggr_sweep_flops,
     lstsq_flops,
     record_dispatch,
 )
-from .health import factor_health, maybe_sample_orthogonality, orthogonality_loss
+from .health import (factor_health, maybe_sample_orthogonality,
+                     ortho_tolerance, orthogonality_loss)
 from .registry import (
     DEFAULT_BUCKETS,
     NULL,
@@ -83,6 +85,7 @@ __all__ = [
     "enabled",
     "factor_health",
     "gauge",
+    "flops_by_dtype",
     "ggr_append_flops",
     "ggr_sweep_flops",
     "histogram",
@@ -90,6 +93,7 @@ __all__ = [
     "load_jsonl",
     "lstsq_flops",
     "maybe_sample_orthogonality",
+    "ortho_tolerance",
     "missing_families",
     "named_span",
     "orthogonality_loss",

@@ -27,6 +27,7 @@ __all__ = [
     "ggr_sweep_flops",
     "ggr_append_flops",
     "lstsq_flops",
+    "flops_by_dtype",
     "record_dispatch",
 ]
 
@@ -52,11 +53,28 @@ def lstsq_flops(m: int, n: int, k: int) -> int:
     return ggr_sweep_flops(m, n + k, n) + n * n * k
 
 
-def record_dispatch(layer: str, flops: float, seconds: float, **labels) -> None:
+def flops_by_dtype(flops: float, compute_dtype="float32",
+                   accum_dtype=None) -> dict:
+    """Split a total dispatch flop count by execution dtype.
+
+    Thin adapter over :func:`repro.core.counts.flops_by_dtype` (which works
+    in model *mults* = flops/2): multiplies run at the tile compute dtype,
+    their paired adds at the accumulator dtype, values sum to ``flops``."""
+    from repro.core.counts import flops_by_dtype as _split
+
+    return _split(int(flops) // 2, compute_dtype, accum_dtype)
+
+
+def record_dispatch(layer: str, flops: float, seconds: float, *,
+                    by_dtype: dict | None = None, **labels) -> None:
     """Record one timed dispatch: duration + achieved GFLOP/s histograms.
 
     ``seconds`` must come from a blocked timer (``obs.device_timer``) or the
-    rate is fiction.  No-op under the null registry.
+    rate is fiction.  ``by_dtype`` (``{dtype_name: flops}``, e.g. from
+    :func:`flops_by_dtype`) additionally bumps per-dtype
+    ``<layer>.flops_total`` counters so mixed-precision dispatches do not
+    launder bf16 multiplies as f32 throughput.  No-op under the null
+    registry.
     """
     reg = _active()
     if not reg.enabled:
@@ -66,3 +84,7 @@ def record_dispatch(layer: str, flops: float, seconds: float, **labels) -> None:
     if seconds > 0.0:
         reg.histogram(f"{layer}.achieved_gflops", **labels).observe(
             flops / seconds / 1e9)
+    if by_dtype:
+        for dt, f in by_dtype.items():
+            reg.counter(f"{layer}.flops_total", dtype=str(dt),
+                        **labels).inc(float(f))

@@ -30,6 +30,7 @@ from ._state import _active
 __all__ = [
     "factor_health",
     "orthogonality_loss",
+    "ortho_tolerance",
     "maybe_sample_orthogonality",
 ]
 
@@ -62,21 +63,43 @@ def factor_health(R, layer: str, **labels) -> None:
 
 def orthogonality_loss(A, R) -> float:
     """``max |Q^T Q - I|`` for the implicit ``Q = A R^{-1}`` (float64 host
-    computation; A is (m, n), R the (n, n) upper factor of its QR)."""
+    computation; A is (m, n), R the (n, n) upper factor of its QR — a full
+    (m, n) triangularized matrix is cut to its top (n, n) block)."""
     Af = np.asarray(A, dtype=np.float64)
     Rf = np.triu(np.asarray(R, dtype=np.float64))
-    n = Rf.shape[0]
+    n = Rf.shape[-1]
+    if Rf.shape[0] > n:
+        Rf = Rf[:n]
     # Q^T = R^{-T} A^T: one triangular-ish solve, no explicit inverse
     Qt = np.linalg.solve(Rf.T, Af.T)
     G = Qt @ Qt.T
     return float(np.abs(G - np.eye(n)).max())
 
 
-def maybe_sample_orthogonality(A, R, layer: str, **labels) -> float | None:
+def ortho_tolerance(n: int, dtype) -> float:
+    """Alarm threshold for ``orthogonality_loss``: ``64 * n * eps(dtype)``.
+
+    Scaled by the *compute* dtype's machine epsilon so the same audit is
+    honest across precision policies — a loss of 1e-3 is an alarm for an
+    f32 factorization (eps ~1.2e-7) but entirely healthy for bf16
+    (eps ~7.8e-3).  The constant 64 gives ~10x headroom over losses
+    observed on well-conditioned problems."""
+    import jax.numpy as jnp
+
+    return 64.0 * float(n) * float(jnp.finfo(jnp.dtype(dtype)).eps)
+
+
+def maybe_sample_orthogonality(A, R, layer: str, *, dtype=None,
+                               **labels) -> float | None:
     """Sampled orthogonality audit: every N-th eligible call (N from
     ``REPRO_OBS_ORTHO_EVERY``, default 16) computes ``orthogonality_loss``
     and records it as ``<layer>.orthogonality_loss``; returns the loss when
-    sampled, else None."""
+    sampled, else None.
+
+    Each sample is judged against ``ortho_tolerance(n, dtype)`` (``dtype``
+    defaults to R's own dtype — pass the policy's compute dtype when R was
+    down-cast for storage); breaches increment
+    ``<layer>.orthogonality_alarms``."""
     reg = _active()
     if not reg.enabled or not _concrete(A, R):
         return None
@@ -87,4 +110,9 @@ def maybe_sample_orthogonality(A, R, layer: str, **labels) -> float | None:
     loss = orthogonality_loss(A, R)
     reg.gauge(f"{layer}.orthogonality_loss", **labels).set(loss)
     reg.counter(f"{layer}.orthogonality_samples", **labels).inc()
+    tol = ortho_tolerance(np.asarray(R).shape[-1],
+                          np.asarray(R).dtype if dtype is None else dtype)
+    reg.gauge(f"{layer}.orthogonality_tolerance", **labels).set(tol)
+    if loss > tol:
+        reg.counter(f"{layer}.orthogonality_alarms", **labels).inc()
     return loss

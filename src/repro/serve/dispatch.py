@@ -170,6 +170,7 @@ class Dispatcher:
     block_b: int = 8
     double_buffer: bool = False
     cache_size: int = 32
+    precision: object | None = None  # Precision | policy name | None
     executables: ExecutableCache = None  # built in __post_init__
     _seen_dispatch: set = field(default_factory=set)  # (group, padded_B)
     _inflight: list = field(default_factory=list)
@@ -177,12 +178,56 @@ class Dispatcher:
     def __post_init__(self):
         if self.executables is None:
             self.executables = ExecutableCache(self.cache_size)
+        if self.precision is not None:
+            from repro.kernels import resolve_precision
+
+            self.precision = resolve_precision(self.precision)
+
+    # ------------------------------------------------------------ precision
+    def block_b_for(self, dtype) -> int:
+        """Storage-scaled batch granularity for one group's at-rest dtype.
+
+        2-byte storage (bf16/f16) halves per-problem VMEM residency, so those
+        groups run — and pad — at double ``block_b``: twice the filters per
+        dispatch for the same resident footprint.  4/8-byte dtypes keep the
+        configured granularity, so existing f32 padding behaviour (and the
+        cache-miss accounting built on it) is unchanged.
+        """
+        try:
+            scale = 2 if jnp.dtype(dtype).itemsize <= 2 else 1
+        except TypeError:
+            scale = 1
+        return self.block_b * scale
+
+    def _chunk_precision(self, store_dtype: str):
+        """``(compute_dtype, kernel_precision)`` for a group stored at
+        ``store_dtype``.
+
+        No policy installed: compute at storage dtype, legacy kernels.  With
+        a policy, the chunk computes at ``promote_types(store, policy)`` —
+        bf16 groups up-cast to f32 under the default policy (and results
+        down-cast back to storage on return); under an explicit bf16/f16
+        policy the low-precision groups stay at tile dtype and the kernels
+        get the mixed policy (wide accumulation); f64 groups always pass
+        through untouched.
+        """
+        if self.precision is None:
+            return store_dtype, None
+        cd = jnp.promote_types(jnp.dtype(store_dtype), self.precision.compute)
+        if cd.itemsize <= 2:
+            from repro.kernels import Precision
+
+            return str(cd), Precision(str(cd), self.precision.accum_dtype,
+                                      store_dtype)
+        return str(cd), None
 
     # ------------------------------------------------------------- padding
-    def padded_chunk(self, nb: int, kind: str) -> int:
+    def padded_chunk(self, nb: int, kind: str, dtype=None) -> int:
         """Batch size a dispatch of ``nb`` requests actually runs at, after
         pad_batch rounding (mesh: shards x block_b, lstsq shards; single
-        device: block_b for every kind and backend).
+        device: block_b for every kind and backend).  ``dtype`` is the
+        group's storage dtype: 2-byte groups round at ``block_b_for``'s
+        doubled granularity.
 
         Rounding *every* single-device path to ``block_b`` — not just the
         pallas kernel that needs the granularity — is what makes continuous
@@ -190,39 +235,51 @@ class Dispatcher:
         an unpadded jit would compile one executable per distinct size.
         Zero problems are exact fixed points of the eps-guarded sweeps, so
         pad lanes come back unchanged and are sliced off."""
+        bb = self.block_b if dtype is None else self.block_b_for(dtype)
         if self.mesh is not None:
             gran = self.mesh.shape[self.mesh_axis] * (
-                1 if kind == "lstsq" else self.block_b)
+                1 if kind == "lstsq" else bb)
         else:
-            gran = self.block_b
+            gran = bb
         return -(-nb // gran) * gran
 
     # ----------------------------------------------------------- executors
-    def _kernel_opts(self) -> dict:
+    def _kernel_opts(self, store_dtype: str | None = None) -> dict:
+        bb = (self.block_b if store_dtype is None
+              else self.block_b_for(store_dtype))
+        kp = (None if store_dtype is None
+              else self._chunk_precision(store_dtype)[1])
         return dict(backend=self.backend, interpret=self.interpret,
-                    block_b=self.block_b, mesh=self.mesh,
-                    mesh_axis=self.mesh_axis)
+                    block_b=bb, mesh=self.mesh,
+                    mesh_axis=self.mesh_axis, precision=kp)
 
     def _exec_append(self, chunk):
         """Stack + pad one append chunk, dispatch the fused batched kernel."""
         from repro.solvers import qr_append_rows_batched
 
         nb = len(chunk)
-        P = self.padded_chunk(nb, "append")
+        store_dt = str(chunk[0].arrays[0].dtype)
+        compute_dt, _ = self._chunk_precision(store_dt)
+        P = self.padded_chunk(nb, "append", store_dt)
         has_rhs = chunk[0].arrays[2] is not None
-        Rb = _pad_to(jnp.stack([r.arrays[0] for r in chunk]), P)
-        Ub = _pad_to(jnp.stack([r.arrays[1] for r in chunk]), P)
+
+        def stack(i):
+            x = _pad_to(jnp.stack([r.arrays[i] for r in chunk]), P)
+            return x if compute_dt == store_dt else x.astype(compute_dt)
+
+        Rb, Ub = stack(0), stack(1)
         n, p = Rb.shape[2], Ub.shape[1]
         if has_rhs:
-            db = _pad_to(jnp.stack([r.arrays[2] for r in chunk]), P)
-            Yb = _pad_to(jnp.stack([r.arrays[3] for r in chunk]), P)
+            db, Yb = stack(2), stack(3)
             Rn, dn = qr_append_rows_batched(Rb, Ub, db, Yb,
-                                            **self._kernel_opts())
-            Rn, dn = Rn[:nb], dn[:nb]
+                                            **self._kernel_opts(store_dt))
+            Rn = Rn[:nb].astype(store_dt)  # down-cast to storage on return
+            dn = dn[:nb].astype(store_dt)
             outs = [(Rn[i], dn[i]) for i in range(nb)]
             w = n + Yb.shape[2]
         else:
-            Rn = qr_append_rows_batched(Rb, Ub, **self._kernel_opts())[:nb]
+            Rn = qr_append_rows_batched(Rb, Ub, **self._kernel_opts(store_dt))
+            Rn = Rn[:nb].astype(store_dt)
             outs = [Rn[i] for i in range(nb)]
             w = n
         return outs, nb * obs.ggr_append_flops(n, p, w), Rn
@@ -231,9 +288,13 @@ class Dispatcher:
         """Stack + pad one lstsq chunk, dispatch the vmapped augmented
         sweep (shard_mapped over the mesh when one is set)."""
         nb = len(chunk)
-        P = self.padded_chunk(nb, "lstsq")
+        store_dt = str(chunk[0].arrays[0].dtype)
+        compute_dt, _ = self._chunk_precision(store_dt)
+        P = self.padded_chunk(nb, "lstsq", store_dt)
         Ab = _pad_to(jnp.stack([r.arrays[0] for r in chunk]), P)
         bb = _pad_to(jnp.stack([r.arrays[1] for r in chunk]), P)
+        if compute_dt != store_dt:
+            Ab, bb = Ab.astype(compute_dt), bb.astype(compute_dt)
         m, n = Ab.shape[1], Ab.shape[2]
         k = bb.shape[2] if bb.ndim > 2 else 1
         if self.mesh is None:
@@ -243,7 +304,8 @@ class Dispatcher:
                 ("lstsq", self.mesh, self.mesh_axis),
                 lambda: _build_sharded_lstsq(self.mesh, self.mesh_axis))
             xs, rs = fn(Ab, bb)
-        xs, rs = xs[:nb], rs[:nb]
+        xs = xs[:nb].astype(store_dt)  # down-cast to storage on return
+        rs = rs[:nb].astype(store_dt)
         outs = [(xs[i], rs[i]) for i in range(nb)]
         return outs, nb * obs.lstsq_flops(m, n, k), None
 
@@ -258,15 +320,19 @@ class Dispatcher:
         from repro.solvers.kalman import kf_step_batched
 
         nb = len(chunk)
-        P = self.padded_chunk(nb, "kalman")
+        store_dt = str(chunk[0].arrays[0].dtype)
+        compute_dt, _ = self._chunk_precision(store_dt)
+        P = self.padded_chunk(nb, "kalman", store_dt)
         has_G = chunk[0].arrays[6] is not None
         nfields = 7 if has_G else 6
 
         def fld(i):
             if i >= 2 and all(r.arrays[i] is chunk[0].arrays[i]
                               for r in chunk):
-                return chunk[0].arrays[i]  # shared: broadcast, don't stack
-            return _pad_to(jnp.stack([r.arrays[i] for r in chunk]), P)
+                x = chunk[0].arrays[i]  # shared: broadcast, don't stack
+            else:
+                x = _pad_to(jnp.stack([r.arrays[i] for r in chunk]), P)
+            return x if compute_dt == store_dt else x.astype(compute_dt)
 
         cols = [fld(i) for i in range(nfields)]
         # per-filter state must always carry the padded batch dim
@@ -274,8 +340,9 @@ class Dispatcher:
         Rn, dn = kf_step_batched(cols[0], cols[1], cols[2], cols[3],
                                  cols[4], cols[5],
                                  cols[6] if has_G else None,
-                                 **self._kernel_opts())
-        Rn, dn = Rn[:nb], dn[:nb]
+                                 **self._kernel_opts(store_dt))
+        Rn = Rn[:nb].astype(store_dt)  # down-cast to storage on return
+        dn = dn[:nb].astype(store_dt)
         outs = [(Rn[i], dn[i]) for i in range(nb)]
         # fused SRIF stack: (w + 2n + p, w + n + 1) with w + n pivots
         # -> n + p rows ride below the (triangular-by-construction) top
@@ -310,7 +377,7 @@ class Dispatcher:
             if rec:
                 # compilation happens at enqueue: count the miss now, keyed
                 # on the PADDED batch (what the jit cache actually keys on)
-                sig = (key, self.padded_chunk(len(chunk), kind))
+                sig = (key, self.padded_chunk(len(chunk), kind, key[2]))
                 if sig not in self._seen_dispatch:
                     self._seen_dispatch.add(sig)
                     obs.counter("serve.executable_cache_miss",
@@ -336,9 +403,15 @@ class Dispatcher:
         if infl.done_at is None:
             infl.done_at = time.perf_counter()
         kind = infl.key[0]
+        store_dt = infl.key[2]  # first required operand's dtype string
+        compute_dt, kernel_prec = self._chunk_precision(store_dt)
+        accum_dt = (kernel_prec.accum_dtype if kernel_prec is not None
+                    else compute_dt)
         obs.record_dispatch("serve", infl.flops, infl.done_at - infl.t0,
-                            kind=kind)
-        padded = self.padded_chunk(infl.nb, kind)
+                            by_dtype=obs.flops_by_dtype(infl.flops,
+                                                        compute_dt, accum_dt),
+                            kind=kind, precision=compute_dt)
+        padded = self.padded_chunk(infl.nb, kind, store_dt)
         obs.gauge("serve.padding_waste", kind=kind).set(
             (padded - infl.nb) / padded if padded else 0.0)
         if infl.r_factor is not None:

@@ -239,7 +239,8 @@ def kf_step(state: KalmanState, F: jax.Array, Qi: jax.Array, H: jax.Array,
 def kf_step_batched(R: jax.Array, d: jax.Array, F: jax.Array, Qi: jax.Array,
                     H: jax.Array, z: jax.Array, G: jax.Array | None = None,
                     *, backend: str = "pallas", interpret: bool | None = None,
-                    block_b: int = 8, mesh=None, mesh_axis: str = "batch"):
+                    block_b: int = 8, mesh=None, mesh_axis: str = "batch",
+                    precision=None):
     """Advance B independent SRIF filters one predict+observe step at once.
 
     R: (B, n, n), d: (B, n), z: (B, p); the model matrices ``F`` (n, n),
@@ -256,9 +257,17 @@ def kf_step_batched(R: jax.Array, d: jax.Array, F: jax.Array, Qi: jax.Array,
     ``shard_map`` over ``mesh_axis``, exactly like
     ``qr_append_rows_batched``: sharded and single-device results agree
     bitwise.
+
+    ``precision``: mixed-precision policy (``Precision`` / name / None).
+    The stacked step matrices run at the policy's compute dtype with wide
+    in-kernel accumulation; the returned ``(R', d')`` carry compute dtype.
     """
     B, n = R.shape[0], R.shape[2]
     w = Qi.shape[-1]
+    if precision is not None:
+        from repro.kernels import resolve_precision  # solvers -> kernels edge
+
+        precision = resolve_precision(precision)
 
     def bcast(M):
         if M is None or M.ndim == 3:
@@ -277,14 +286,15 @@ def kf_step_batched(R: jax.Array, d: jax.Array, F: jax.Array, Qi: jax.Array,
 
     n_piv = w + n
     if mesh is None:
-        out = _update_stacked(stacked, n_piv, backend, interpret, block_b)
+        out = _update_stacked(stacked, n_piv, backend, interpret, block_b,
+                              precision=precision)
     else:
         from repro.kernels import pad_batch  # deferred: solvers -> kernels edge
 
         shards = mesh.shape[mesh_axis]
         padded = pad_batch(stacked, shards * block_b)
         fn = _sharded_update_fn(mesh, mesh_axis, n_piv, backend, interpret,
-                                block_b)
+                                block_b, precision)
         out = fn(padded)[:B]
     R_new = jnp.triu(out[:, w:w + n, w:w + n])
     return R_new, out[:, w:w + n, w + n]

@@ -95,21 +95,31 @@ def qr_append_rows(R: jax.Array, U: jax.Array, d: jax.Array | None = None,
 
 
 def _update_stacked(stacked: jax.Array, n: int, backend: str,
-                    interpret: bool | None, block_b: int) -> jax.Array:
-    """Single-device batched sweep over stacked (B, n+p, w) problems."""
+                    interpret: bool | None, block_b: int,
+                    precision=None) -> jax.Array:
+    """Single-device batched sweep over stacked (B, n+p, w) problems.
+
+    ``precision`` must already be resolved (a ``kernels.Precision`` or None)
+    so it stays hashable through ``_sharded_update_fn``'s lru_cache.  The
+    reference backend casts to the compute dtype and relies on
+    ``ggr_triangularize``'s own float32-promoted accumulation.
+    """
     if backend == "reference":
+        if precision is not None:
+            stacked = stacked.astype(precision.compute)
         return jax.vmap(lambda X: ggr_triangularize(X, n))(stacked)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
     from repro.kernels import batched_update  # deferred: solvers -> kernels edge
 
     return batched_update(stacked, n_pivots=n, block_b=block_b,
-                          interpret=interpret)
+                          interpret=interpret, precision=precision)
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_update_fn(mesh, mesh_axis: str, n: int, backend: str,
-                       interpret: bool | None, block_b: int):
+                       interpret: bool | None, block_b: int,
+                       precision=None):
     """jit'd shard_map dispatch, cached per (mesh, schedule) so repeated
     flushes of the same group shape reuse one executable instead of
     re-tracing the mapped kernel every call (Mesh is hashable).  Bounded:
@@ -123,7 +133,8 @@ def _sharded_update_fn(mesh, mesh_axis: str, n: int, backend: str,
     # check_vma off: pallas_call has no replication rule; the map is
     # trivially element-wise over shards (no collectives), so safe.
     return jax.jit(shard_map_compat(
-        lambda x: _update_stacked(x, n, backend, interpret, block_b),
+        lambda x: _update_stacked(x, n, backend, interpret, block_b,
+                                  precision=precision),
         mesh=mesh,
         in_specs=P(mesh_axis),
         out_specs=P(mesh_axis),
@@ -137,7 +148,8 @@ def qr_append_rows_batched(R: jax.Array, U: jax.Array,
                            *, backend: str = "pallas",
                            interpret: bool | None = None,
                            block_b: int = 8,
-                           mesh=None, mesh_axis: str = "batch"):
+                           mesh=None, mesh_axis: str = "batch",
+                           precision=None):
     """Batch of independent row-append updates in one fused kernel launch.
 
     R: (B, n, n) upper triangular, U: (B, p, n), optional d: (B, n, k),
@@ -157,17 +169,24 @@ def qr_append_rows_batched(R: jax.Array, U: jax.Array,
     n = R.shape[2]
     if (d is None) != (Y is None):
         raise ValueError("pass both d and Y, or neither")
+    if precision is not None:
+        from repro.kernels import resolve_precision
+
+        # resolved here so the cached sharded path sees only hashable values
+        precision = resolve_precision(precision)
     stacked = jax.vmap(_stack_update, in_axes=(0, 0, 0 if d is not None else None,
                                               0 if Y is not None else None))(R, U, d, Y)
     if mesh is None:
-        out = _update_stacked(stacked, n, backend, interpret, block_b)
+        out = _update_stacked(stacked, n, backend, interpret, block_b,
+                              precision=precision)
     else:
         from repro.kernels import pad_batch
 
         B = stacked.shape[0]
         shards = mesh.shape[mesh_axis]
         padded = pad_batch(stacked, shards * block_b)
-        fn = _sharded_update_fn(mesh, mesh_axis, n, backend, interpret, block_b)
+        fn = _sharded_update_fn(mesh, mesh_axis, n, backend, interpret,
+                                block_b, precision)
         out = fn(padded)[:B]
     R_new = jnp.triu(out[:, :n, :n])
     if d is None:

@@ -1,0 +1,41 @@
+"""repro.testing: reusable numerical-verification harnesses.
+
+Not imported by any production path — tests and benchmarks pull from here
+so their matrix suites, error metrics, and tolerance budgets stay in one
+place instead of drifting apart file by file.
+"""
+from .error_harness import (
+    DEFAULT_CONDS,
+    DEFAULT_SHAPES,
+    Case,
+    backward_error,
+    budget_is_meaningful,
+    dtype_eps,
+    error_budget,
+    factorization_errors,
+    fleet_nis,
+    forward_error,
+    graded_matrix,
+    gram_residual,
+    matrix_suite,
+    orthogonality_loss,
+    sign_align,
+)
+
+__all__ = [
+    "Case",
+    "DEFAULT_CONDS",
+    "DEFAULT_SHAPES",
+    "backward_error",
+    "budget_is_meaningful",
+    "dtype_eps",
+    "error_budget",
+    "factorization_errors",
+    "fleet_nis",
+    "forward_error",
+    "graded_matrix",
+    "gram_residual",
+    "matrix_suite",
+    "orthogonality_loss",
+    "sign_align",
+]

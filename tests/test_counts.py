@@ -172,3 +172,64 @@ def test_multcount_behaves_like_int():
     assert "exact=False" in repr(c)
     # arithmetic demotes to plain int — the flag never silently propagates
     assert not isinstance(c + 1, MultCount)
+
+
+def test_flops_by_dtype_uniform_collapses():
+    from repro.core import flops_by_dtype
+
+    m = ggr_append_mults(6, 3, 6)
+    assert flops_by_dtype(m) == {"float32": mults_to_flops(m)}
+    assert flops_by_dtype(m, "float32", "float32") == {
+        "float32": mults_to_flops(m)}
+
+
+def test_flops_by_dtype_mixed_splits_halves():
+    """bf16 tiles + f32 accumulation: the multiplies are bf16 work, their
+    paired adds f32 work — a uniform 2x conversion would mislabel half the
+    census."""
+    from repro.core import flops_by_dtype
+
+    m = ggr_sweep_mults(32, 16, 16)
+    split = flops_by_dtype(m, "bfloat16", "float32")
+    assert split == {"bfloat16": int(m), "float32": int(m)}
+    assert sum(split.values()) == mults_to_flops(m)
+
+
+def test_flops_by_dtype_accepts_multcount_and_shorthand():
+    from repro.core import flops_by_dtype
+
+    c = count_mults(lambda x: (x * x) * x, jnp.ones(4))
+    assert c.exact
+    split = flops_by_dtype(c, "bfloat16", "float32")
+    assert split == {"bfloat16": 8, "float32": 8}
+    # inexact censuses split the same way — the flag lives on the census,
+    # the split is just bookkeeping over it
+    est = MultCount(10, exact=False)
+    assert flops_by_dtype(est, "float16", "float32") == {
+        "float16": 10, "float32": 10}
+
+
+def test_record_dispatch_by_dtype_counters():
+    """Mixed-precision dispatches surface per-dtype flop counters so the
+    GFLOP/s stories stay honest per execution dtype."""
+    from repro import obs
+    from repro.core import flops_by_dtype
+
+    reg = obs.MetricsRegistry()
+    obs.install(reg)
+    try:
+        flops = mults_to_flops(ggr_append_mults(6, 3, 6))
+        obs.record_dispatch("serve", flops, 1e-3, kind="append",
+                            by_dtype=flops_by_dtype(flops // 2,
+                                                    "bfloat16", "float32"),
+                            precision="bfloat16")
+        vals = {tuple(sorted(dict(m.labels).items())): m.value
+                for m in reg.collect() if m.name == "serve.flops_total"}
+        key16 = (("dtype", "bfloat16"), ("kind", "append"),
+                 ("precision", "bfloat16"))
+        key32 = (("dtype", "float32"), ("kind", "append"),
+                 ("precision", "bfloat16"))
+        assert vals[key16] == flops // 2
+        assert vals[key32] == flops // 2
+    finally:
+        obs.uninstall()

@@ -140,6 +140,56 @@ def test_orthogonality_sampling_respects_env(monkeypatch):
     assert reg.find("unit.orthogonality_samples").value == 1
 
 
+def test_ortho_tolerance_scales_with_dtype_eps():
+    """The audit threshold is 64*n*eps of the *compute* dtype — a hardcoded
+    f32 constant would page on every healthy bf16 factorization."""
+    n = 8
+    assert obs.ortho_tolerance(n, "float32") == pytest.approx(
+        64 * n * float(jnp.finfo(jnp.float32).eps))
+    assert obs.ortho_tolerance(n, "bfloat16") == pytest.approx(
+        64 * n * float(jnp.finfo(jnp.bfloat16).eps))
+    assert obs.ortho_tolerance(n, "bfloat16") > 1e4 * obs.ortho_tolerance(
+        n, "float32")
+
+
+def test_orthogonality_alarm_keyed_to_dtype(monkeypatch):
+    """A healthy bf16-stored factor breaches the f32 tolerance but must not
+    alarm when judged at its own precision; a truly wrong factor alarms at
+    any precision."""
+    monkeypatch.setenv("REPRO_OBS_ORTHO_EVERY", "1")
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    R = jnp.linalg.qr(A, mode="r")
+    R16 = R.astype(jnp.bfloat16)
+    loss16 = obs.orthogonality_loss(A, R16)
+    assert loss16 > obs.ortho_tolerance(8, "float32")  # the old-style page
+    with obs.collecting() as reg:
+        obs.maybe_sample_orthogonality(A, R16, "unit")  # dtype from R: bf16
+    assert reg.find("unit.orthogonality_alarms") is None
+    assert reg.find("unit.orthogonality_tolerance").value == pytest.approx(
+        obs.ortho_tolerance(8, "bfloat16"))
+    # explicit dtype override: judge the same sample at f32 -> alarm
+    with obs.collecting() as reg:
+        obs.maybe_sample_orthogonality(A, R16, "unit", dtype="float32")
+    assert reg.find("unit.orthogonality_alarms").value == 1
+    # a genuinely wrong factor alarms even at bf16 tolerance (an
+    # undersized R inflates Q: loss ~ 1/s^2 - 1 >> 64*n*eps(bf16))
+    with obs.collecting() as reg:
+        obs.maybe_sample_orthogonality(A, R / 30.0, "unit", dtype="bfloat16")
+    assert reg.find("unit.orthogonality_alarms").value == 1
+
+
+def test_orthogonality_loss_accepts_full_triangularized_matrix():
+    """(m, n) inputs (full triangularized matrices, zeros below the top
+    square) audit identically to their top (n, n) block."""
+    rng = np.random.default_rng(3)
+    A = rng.standard_normal((24, 6))
+    Rfull = np.linalg.qr(A, mode="complete")[1]  # (24, 6), zero rows below
+    Rsq = Rfull[:6]
+    assert obs.orthogonality_loss(A, Rfull) == pytest.approx(
+        obs.orthogonality_loss(A, Rsq))
+
+
 # --------------------------------------------------------------- exporters
 def test_jsonl_snapshot_roundtrip(tmp_path):
     with obs.collecting() as reg:

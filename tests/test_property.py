@@ -86,3 +86,76 @@ def test_alpha_bounds(n):
 
     a = alpha_ratio(n)
     assert 0.75 < a <= 1.0 + 1e-12
+
+
+# ------------------------------------------------- padding round-trips
+
+@given(matrices(max_dim=12), st.integers(1, 8), st.integers(1, 8))
+@settings(**_settings)
+def test_pad_to_tile_round_trip(A, tr, tc):
+    """Padding to any tile grid then slicing back is the identity, the
+    padded extents are exact multiples, and the padding is all zeros."""
+    from repro.kernels import pad_to_tile
+
+    m, n = A.shape
+    out = np.asarray(pad_to_tile(jnp.asarray(A), (tr, tc)))
+    assert out.shape[0] % tr == 0 and out.shape[1] % tc == 0
+    assert out.shape[0] - m < tr and out.shape[1] - n < tc
+    np.testing.assert_array_equal(out[:m, :n], A)
+    assert not out[m:, :].any() and not out[:, n:].any()
+
+
+@given(st.integers(1, 33), st.integers(1, 12), st.integers(1, 6))
+@settings(**_settings)
+def test_pad_batch_round_trip(B, mult, n):
+    from repro.kernels import pad_batch
+
+    x = np.arange(B * n, dtype=np.float64).reshape(B, n) + 1.0
+    out = np.asarray(pad_batch(jnp.asarray(x), mult))
+    assert out.shape[0] % mult == 0 and out.shape[0] - B < mult
+    np.testing.assert_array_equal(out[:B], x)
+    assert not out[B:].any()
+
+
+# ------------------------------------------------- precision resolution
+
+_DTYPE_NAMES = st.sampled_from(
+    ["float64", "float32", "bfloat16", "float16", "f64", "f32", "bf16", "f16"])
+
+
+@given(_DTYPE_NAMES, _DTYPE_NAMES, _DTYPE_NAMES)
+@settings(**_settings)
+def test_resolve_precision_total_over_dtype_combinations(cd, ad, sd):
+    """For every dtype triple: resolution either returns a canonicalized,
+    idempotent policy whose accumulator is no narrower than its tiles, or
+    raises ValueError — never anything in between."""
+    from repro.kernels import Precision, resolve_precision
+
+    try:
+        p = resolve_precision(Precision(cd, ad, sd))
+    except ValueError:
+        # only legal rejection: accumulating below tile precision
+        canon = {"f64": "float64", "f32": "float32",
+                 "bf16": "bfloat16", "f16": "float16"}
+        cdt = jnp.dtype(canon.get(cd, cd))
+        adt = jnp.dtype(canon.get(ad, ad))
+        assert jnp.promote_types(cdt, adt) != adt
+        return
+    assert p == resolve_precision(p)  # idempotent
+    assert jnp.promote_types(p.compute, p.accum) == p.accum
+    for field in p:
+        assert field == str(jnp.dtype(field).name)  # canonical names
+
+
+@given(st.sampled_from(["f64", "f32", "bf16", "f16", "float64", "float32",
+                        "bfloat16", "float16", "mixed_bf16", "mixed_f16"]))
+@settings(**_settings)
+def test_resolve_precision_aliases_sound(name):
+    from repro.kernels import resolve_precision
+
+    p = resolve_precision(name)
+    assert p.store_dtype == p.compute_dtype  # aliases store at tile dtype
+    if jnp.dtype(p.compute).itemsize <= 2:
+        assert p.accum_dtype == "float32" and p.is_mixed
+    else:
+        assert p.accum_dtype == p.compute_dtype and not p.is_mixed

@@ -324,6 +324,60 @@ def test_cache_miss_accounting_reference_lstsq_pads_to_block_b():
     assert _counter_sum(reg, "serve.executable_cache_miss", kind="lstsq") == 2
 
 
+def test_mixed_dtype_same_shape_requests_land_in_distinct_batches():
+    """bf16-store and f32-store requests of identical shapes must never be
+    stacked together: the group signature carries the dtype, so each dtype
+    gets its own batch, executable, and (scaled) padding grid."""
+    from repro.launch.serve_qr import QRServer
+
+    rng = np.random.default_rng(11)
+    R, U = _append_args(rng)
+    server = QRServer(backend="pallas", interpret=True, block_b=8)
+    t32 = server.submit_append(jnp.asarray(R, jnp.float32),
+                               jnp.asarray(U, jnp.float32))
+    t16 = server.submit_append(jnp.asarray(R, jnp.bfloat16),
+                               jnp.asarray(U, jnp.bfloat16))
+    assert t32.group != t16.group
+    assert t32.group[2] == "float32" and t16.group[2] == "bfloat16"
+    with obs.collecting() as reg:
+        server.flush()
+    # one dispatch per dtype group, each accounted at its own precision
+    assert _counter_sum(reg, "serve.dispatches", kind="append",
+                        precision="float32") == 1
+    assert _counter_sum(reg, "serve.dispatches", kind="append",
+                        precision="bfloat16") == 1
+    # bf16 storage rides a 2x dispatch block: padded grids differ
+    d = server._engine.dispatcher
+    assert d.padded_chunk(1, "append", "float32") == 8
+    assert d.padded_chunk(1, "append", "bfloat16") == 16
+
+
+def test_mixed_dtype_round_trip_is_bitwise_per_store_dtype():
+    """Each store dtype must round-trip bitwise against a server fed only
+    that dtype — co-resident other-dtype groups cannot perturb results."""
+    from repro.launch.serve_qr import QRServer
+
+    rng = np.random.default_rng(12)
+    R, U = _append_args(rng)
+    ops = [(jnp.asarray(R, jnp.float32), jnp.asarray(U, jnp.float32)),
+           (jnp.asarray(R, jnp.bfloat16), jnp.asarray(U, jnp.bfloat16))]
+
+    mixed = QRServer(backend="pallas", interpret=True)
+    tickets = [mixed.submit_append(Ri, Ui) for Ri, Ui in ops]
+    mixed.flush()
+    mixed.drain()
+    got = [mixed.result(t) for t in tickets]
+
+    for (Ri, Ui), out in zip(ops, got):
+        solo = QRServer(backend="pallas", interpret=True)
+        t = solo.submit_append(Ri, Ui)
+        solo.flush()
+        solo.drain()
+        expect = solo.result(t)
+        assert out.dtype == Ri.dtype
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
 # ------------------------------------------------------- double buffering
 def test_double_buffered_dispatch_matches_facade():
     """Async double-buffered continuous batching returns the same numbers
