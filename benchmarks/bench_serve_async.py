@@ -75,7 +75,7 @@ def _wait_until(target: float, engine=None) -> None:
 def run_async(reqs, arrivals, args):
     """Open-loop run through the double-buffered continuous batcher."""
     tiers = {k: LatencyTier(deadline=args.deadline)
-             for k in ("append", "lstsq", "kalman")}
+             for k in ("append", "lstsq", "kalman", "lstsq_pivoted")}
     engine = ContinuousBatcher(
         Dispatcher(backend=args.backend, max_batch=args.max_batch,
                    double_buffer=True),
@@ -119,6 +119,8 @@ def run_sync(reqs, arrivals, args):
         submit_ts.append(time.perf_counter())
         if r[0] == "lstsq":
             tickets.append(server.submit_lstsq(r[1], r[2]))
+        elif r[0] == "lstsq_pivoted":
+            tickets.append(server.submit_lstsq_pivoted(r[1], r[2]))
         elif r[0] == "kalman":
             tickets.append(server.submit_kalman(*r[1:]))
         else:
@@ -168,6 +170,8 @@ def _check_results(engine, tickets, reqs, args) -> float:
     for r in reqs:
         if r[0] == "lstsq":
             oticks.append(oracle.submit_lstsq(r[1], r[2]))
+        elif r[0] == "lstsq_pivoted":
+            oticks.append(oracle.submit_lstsq_pivoted(r[1], r[2]))
         elif r[0] == "kalman":
             oticks.append(oracle.submit_kalman(*r[1:]))
         else:
@@ -239,6 +243,8 @@ def main(argv=None) -> None:
     for r in reqs:
         if r[0] == "lstsq":
             warm.submit_lstsq(r[1], r[2])
+        elif r[0] == "lstsq_pivoted":
+            warm.submit_lstsq_pivoted(r[1], r[2])
         elif r[0] == "kalman":
             warm.submit_kalman(*r[1:])
         else:

@@ -19,6 +19,9 @@ Paper artifact map:
                         driver vs the reference tile driver, unblocked
                         ggr_qr2 and jnp.linalg.qr (GFLOP/s + speedups);
                         always writes BENCH_blocked.json
+  bench_rrqr         -> rank-revealing QR overhead + sketch-preconditioned
+                        LSQR iters/residual-gap vs plain LSQR across
+                        cond 1e2..1e8; always writes BENCH_rrqr.json
 
 Run all benches with no args, or name a subset: ``python run.py bench_update``.
 ``--check`` runs bench_blocked in small-shape smoke mode (correctness
@@ -515,9 +518,113 @@ def bench_precision():
     return rows
 
 
+def bench_rrqr():
+    """Rank-revealing QR + sketch-preconditioned least-squares trade curves.
+
+    Section 1 — pivoting overhead: ``ggr_qr_pivoted`` vs the same unpivoted
+    size-routed driver it reduces through, plus rank correctness on a
+    rank-deficient input (``estimate_rank`` vs the constructed truth).
+    Section 2 — ``sketch_lstsq`` vs plain (unpreconditioned) LSQR across
+    cond 1e2..1e8 on tall-skinny problems built with a known residual
+    (``b = A x0 + r0`` with ``r0`` projected out of range(A), so the oracle
+    residual is exactly ``||r0||``): iterations taken and the relative
+    residual gap to the oracle.  Full mode adds the acceptance shape
+    (100k x 256 at cond 1e8) where plain LSQR cannot converge in the same
+    iteration budget; ``--check`` asserts the identical contracts on small
+    shapes — sketch gap <= 1e-6 within 50 iterations, plain LSQR gap
+    > 1e-6 at cond 1e8, exact rank recovery.  Always writes
+    ``BENCH_rrqr.json``.  Enables x64 (f64 oracles) for the rest of the
+    process, so it runs last in the default bench order.
+    """
+    import json
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.ranks import estimate_rank, ggr_qr_pivoted, lsqr, sketch_lstsq
+    from repro.solvers.lstsq import _triangularize_auto
+    from repro.testing import graded_matrix, rank_deficient_matrix
+
+    rows, records, failures = [], [], []
+    reps, warmup = (1, 1) if _CHECK else (3, 1)
+
+    # --- section 1: pivoting overhead + rank correctness -------------------
+    shapes = [(256, 64)] if _CHECK else [(1024, 128), (2048, 256)]
+    for m, n in shapes:
+        A = jnp.asarray(graded_matrix(m, n, 1e4, seed=5))
+        unpiv = jax.jit(lambda x, n=n: jnp.triu(_triangularize_auto(x, n)[:n]))
+        t_u, _ = _time(unpiv, A, reps=reps, warmup=warmup)
+        t_p, st = _time(lambda x: ggr_qr_pivoted(x), A,
+                        reps=reps, warmup=warmup)
+        overhead = t_p / t_u
+        rows.append(f"rrqr_pivot_m{m}n{n},{t_p:.0f},"
+                    f"unpivoted_us={t_u:.0f};overhead={overhead:.2f}x")
+        records.append({"name": "pivot_overhead", "m": m, "n": n,
+                        "us_pivoted": t_p, "us_unpivoted": t_u,
+                        "overhead": overhead})
+
+        true_rank = n // 2
+        Ad = jnp.asarray(rank_deficient_matrix(m, n, true_rank,
+                                               cond=1e6, seed=7))
+        rk = int(estimate_rank(ggr_qr_pivoted(Ad).R))
+        rows.append(f"rrqr_rank_m{m}n{n},0,est={rk};true={true_rank}")
+        records.append({"name": "rank_recovery", "m": m, "n": n,
+                        "rank_true": true_rank, "rank_est": rk})
+        if rk != true_rank:
+            failures.append(f"rank {m}x{n}: est {rk} != true {true_rank}")
+
+    # --- section 2: sketch-preconditioned vs plain LSQR --------------------
+    conds = (1e2, 1e8) if _CHECK else (1e2, 1e4, 1e6, 1e8)
+    sk_shapes = [(2048, 64)] if _CHECK else [(16384, 128)]
+    cases = [(m, n, c) for m, n in sk_shapes for c in conds]
+    if not _CHECK:
+        cases.append((100_000, 256, 1e8))  # the acceptance shape
+    for m, n, cond in cases:
+        A64 = graded_matrix(m, n, cond, seed=11)
+        rng = np.random.default_rng(211)
+        x0 = rng.standard_normal(n)
+        r0 = rng.standard_normal(m)
+        Q, _ = np.linalg.qr(A64)
+        r0 -= Q @ (Q.T @ r0)           # r0 _|_ range(A): oracle resid = ||r0||
+        r0 *= 0.1 / np.linalg.norm(r0)
+        oracle = float(np.linalg.norm(r0))
+        Aj = jnp.asarray(A64)
+        bj = jnp.asarray(A64 @ x0 + r0)
+
+        r = 1 if m >= 100_000 else reps
+        t_s, fit = _time(lambda a, b: sketch_lstsq(a, b, iters=50, tol=1e-12),
+                         Aj, bj, reps=r, warmup=1)
+        gap_s = abs(float(fit.resid) - oracle) / oracle
+        it_s = int(fit.iters)
+        _, it_p, rn_p, _ = lsqr(Aj, bj, iters=50, tol=1e-12)
+        gap_p = abs(float(rn_p) - oracle) / oracle
+        rows.append(f"rrqr_sketch_m{m}n{n}_cond{cond:.0e},{t_s:.0f},"
+                    f"iters={it_s};gap={gap_s:.1e};"
+                    f"plain_iters={int(it_p)};plain_gap={gap_p:.1e}")
+        records.append({"name": "sketch_lstsq", "m": m, "n": n, "cond": cond,
+                        "us_per_call": t_s, "iters": it_s, "resid_gap": gap_s,
+                        "plain_iters": int(it_p), "plain_resid_gap": gap_p,
+                        "oracle_resid": oracle})
+        if gap_s > 1e-6:
+            failures.append(f"sketch {m}x{n} cond={cond:.0e}: "
+                            f"resid gap {gap_s:.2e} > 1e-6 in {it_s} iters")
+        if cond >= 1e8 and gap_p <= 1e-6:
+            failures.append(f"plain LSQR {m}x{n} cond={cond:.0e}: "
+                            f"converged (gap {gap_p:.2e}) — preconditioning "
+                            f"advantage not exercised")
+
+    out = {"bench": "bench_rrqr", "check": _CHECK, "results": records}
+    path = os.path.join(os.getcwd(), "BENCH_rrqr.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    rows.append(f"rrqr_json,0,path={path}")
+    if _CHECK and failures:
+        sys.exit("bench_rrqr --check FAILED: " + "; ".join(failures))
+    return rows
+
+
 BENCHES = [bench_counts, bench_routines, bench_pe_analogue, bench_kernels,
            bench_scaling, bench_update, bench_serve, bench_kalman,
-           bench_blocked, bench_precision]
+           bench_blocked, bench_precision, bench_rrqr]
 
 
 def main() -> None:

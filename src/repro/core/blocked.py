@@ -64,6 +64,7 @@ __all__ = [
     "ggr_qr_blocked",
     "ggr_qr_blocked_reference",
     "ggr_triangularize_blocked",
+    "suffix_col_norms",
 ]
 
 
@@ -95,6 +96,21 @@ def ggr_tsqrt(R_top: jax.Array, B: jax.Array):
     stacked = jnp.concatenate([R_top, B], axis=0)
     R, Qt = ggr_geqrt(stacked)
     return R[:b, :], Qt
+
+
+def suffix_col_norms(X: jax.Array) -> jax.Array:
+    """Squared suffix column norms ``t2[i, j] = sum_{r>=i} X[r, j]^2``.
+
+    The matrix-wide form of the paper's eq. 3 DOT_k macro-op: one reverse
+    cumulative sum yields every candidate column's trailing norm at every
+    elimination depth.  The per-column sweeps already compute these suffix
+    sums for their own (k, l) coefficients, which is why greedy column
+    pivoting (``repro.ranks.ggr_qr_pivoted`` reads row ``c`` of this matrix
+    to select pivot ``c``) adds no new datapath to the blocked driver.
+    f32-promoted accumulation, matching ``core.ggr.suffix_norms``.
+    """
+    acc = X.astype(jnp.promote_types(X.dtype, jnp.float32))
+    return jnp.cumsum((acc * acc)[::-1], axis=0)[::-1]
 
 
 @functools.partial(jax.jit, static_argnames=("tile",))

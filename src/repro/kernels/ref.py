@@ -10,7 +10,13 @@ import jax.numpy as jnp
 
 from repro.core.ggr import GGRFactors, apply_ggr_factors, ggr_column_step_at, ggr_factor_column
 
-__all__ = ["ref_panel_factor", "ref_apply_factors", "ref_det2_grid", "ref_suffix_stats"]
+__all__ = [
+    "ref_panel_factor",
+    "ref_pivoted_panel_factor",
+    "ref_apply_factors",
+    "ref_det2_grid",
+    "ref_suffix_stats",
+]
 
 
 def ref_suffix_stats(v: jax.Array, X: jax.Array):
@@ -41,6 +47,34 @@ def ref_panel_factor(panel: jax.Array, pivot0: int = 0):
         V = V.at[:, c].set(f.v)
         T = T.at[:, c].set(f.t)
     return X, V, T
+
+
+def ref_pivoted_panel_factor(panel: jax.Array):
+    """Column-pivoted variant of ``ref_panel_factor`` (the QRCP oracle).
+
+    Per step: trailing column norms — row ``c`` of the eq. 3 suffix-norm
+    matrix, exactly what ``ref_suffix_stats`` computes per column — select
+    the pivot, a column swap moves it in, and the ordinary GGR step
+    annihilates it.  Returns ``(R, perm)``; the panel pivoting of
+    ``repro.ranks.ggr_qr_pivoted`` is validated against this sequential
+    form in ``tests/test_ranks.py``.
+    """
+    m, b = panel.shape
+    f32 = jnp.promote_types(panel.dtype, jnp.float32)
+    X = panel
+    perm = list(range(b))
+    for c in range(min(m, b)):
+        Xa = X.astype(f32)
+        t2 = jnp.cumsum((Xa * Xa)[::-1], axis=0)[::-1][c]
+        j = c + int(jnp.argmax(t2[c:]))
+        if j != c:
+            idx = list(range(b))
+            idx[c], idx[j] = idx[j], idx[c]
+            X = X[:, idx]
+            perm[c], perm[j] = perm[j], perm[c]
+        if c < m - 1:
+            X = ggr_column_step_at(X, c)
+    return jnp.triu(X), jnp.asarray(perm, jnp.int32)
 
 
 def ref_apply_factors(V: jax.Array, T: jax.Array, C: jax.Array, pivot0: int = 0):

@@ -15,7 +15,9 @@ Request kinds: ``append`` (row-append a compact ``(R, d)`` state), ``lstsq``
 (one-shot solve), ``kalman`` (one square-root information filter
 predict+observe step — ``repro.solvers.kalman.kf_step`` — batched through
 ``kf_step_batched``'s fused stacked sweep; the millions-of-small-trackers
-workload).
+workload), and ``lstsq_pivoted`` (rank-revealing one-shot solve for
+ill-posed traffic — batched ``repro.ranks.lstsq_pivoted``, returning
+``(x, resid, rank)``).
 
 Sharded serving: pass ``mesh=`` (a 1-D device mesh, e.g. from
 ``repro.parallel.sharding.make_batch_mesh``) and every flushed group is
@@ -87,7 +89,7 @@ class QRServer:
     most this many stacked requests (bounds the kernel's VMEM block count).
     mesh/mesh_axis: optional 1-D device mesh; when set, each chunk is
     dispatched through ``shard_map`` over ``mesh_axis`` with the batch padded
-    to ``shards x block_b`` (appends/kalman) or ``shards`` (lstsq) and sliced
+    to ``shards x block_b`` (appends/kalman) or ``shards`` (lstsq kinds) and sliced
     back.  Requests of the same shape but different dtypes land in
     *different* groups — stacking never silently promotes a request's dtype.
     """
@@ -134,6 +136,18 @@ class QRServer:
         """Queue a one-shot least-squares solve min ||Ax - b||."""
         return self._engine.submit("lstsq", A, b)
 
+    def submit_lstsq_pivoted(self, A, b) -> Ticket:
+        """Queue a rank-revealing least-squares solve (ill-posed traffic).
+
+        Dispatches the batched column-pivoted GGR path
+        (``repro.ranks.lstsq_pivoted``): the result is ``(x, resid, rank)``
+        with ``x`` the min-norm solution over the detected numerical rank
+        and ``rank`` an int32 scalar.  Use this kind when ``A`` may be
+        rank-deficient — the plain ``lstsq`` kind would amplify noise by
+        1/|r_ii| on collapsed pivots.
+        """
+        return self._engine.submit("lstsq_pivoted", A, b)
+
     def submit_kalman(self, R, d, F, Qi, H, z, G=None) -> Ticket:
         """Queue one SRIF predict+observe step of a ``(R, d)`` Kalman state.
 
@@ -156,7 +170,8 @@ class QRServer:
     def flush(self, kind: str | None = None) -> int:
         """Dispatch queued groups; returns the number of requests served.
 
-        ``kind`` (None | "append" | "lstsq" | "kalman") restricts the flush
+        ``kind`` (None | "append" | "lstsq" | "kalman" | "lstsq_pivoted")
+        restricts the flush
         to matching groups — e.g. a latency-sensitive deployment can flush
         one-shot solves more often than state updates.  Results become
         available via ``result(ticket)``; flushed queues reset and each
@@ -188,11 +203,14 @@ class QRServer:
 
 
 def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
-    """Synthetic request mix covering all three kinds and their edge forms:
+    """Synthetic request mix covering all four kinds and their edge forms:
     row-append updates (1/2, every 4th of them a bare no-rhs append — the
     result-is-one-array case the ``--check`` normalization must handle),
     SRIF Kalman steps (1/4, alternating fleet-shared model matrices — the
-    broadcast case — with per-track models), one-shot solves (1/4)."""
+    broadcast case — with per-track models), one-shot solves (1/4, split
+    between well-conditioned plain ``lstsq`` and deliberately
+    rank-deficient ``lstsq_pivoted`` requests — rank ``ceil(n/2)`` factors,
+    the ill-posed traffic the rank-revealing path exists for)."""
     rng = np.random.default_rng(seed)
 
     def _triu_spd(size):
@@ -215,6 +233,14 @@ def make_workload(num: int, n: int, rows: int, k: int, seed: int = 0):
     reqs = []
     for i in range(num):
         if i % 4 == 3:
+            if i % 8 == 3:
+                # rank-deficient by construction: tall x thin product
+                r = -(-n // 2)
+                A = (rng.standard_normal((4 * n, r)) @
+                     rng.standard_normal((r, n))).astype(np.float32)
+                b = rng.standard_normal((4 * n, k)).astype(np.float32)
+                reqs.append(("lstsq_pivoted", A, b))
+                continue
             A = rng.standard_normal((4 * n, n)).astype(np.float32)
             b = rng.standard_normal((4 * n, k)).astype(np.float32)
             reqs.append(("lstsq", A, b))
@@ -243,6 +269,8 @@ def _submit_all(server, reqs):
     for r in reqs:
         if r[0] == "lstsq":
             tickets.append(server.submit_lstsq(r[1], r[2]))
+        elif r[0] == "lstsq_pivoted":
+            tickets.append(server.submit_lstsq_pivoted(r[1], r[2]))
         elif r[0] == "kalman":
             tickets.append(server.submit_kalman(*r[1:]))
         else:

@@ -53,8 +53,9 @@ from .flops import (
     lstsq_flops,
     record_dispatch,
 )
-from .health import (factor_health, maybe_sample_orthogonality,
-                     ortho_tolerance, orthogonality_loss)
+from .health import (condition_estimate, factor_health,
+                     maybe_sample_orthogonality, ortho_tolerance,
+                     orthogonality_loss)
 from .registry import (
     DEFAULT_BUCKETS,
     NULL,
@@ -80,6 +81,7 @@ __all__ = [
     "annotate_fn",
     "block_ready",
     "collecting",
+    "condition_estimate",
     "counter",
     "device_timer",
     "enabled",

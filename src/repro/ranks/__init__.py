@@ -1,0 +1,61 @@
+"""repro.ranks: rank-aware linear algebra on the GGR kernels (ROADMAP item 5).
+
+Everything upstream of this package assumes full column rank; this is the
+layer that survives traffic which isn't that polite.  Three capabilities,
+all built from the same macro-op vocabulary (suffix norms + DET2 grids) the
+factorization kernels already run:
+
+* ``pivoted`` — column-pivoted GGR QR (``ggr_qr_pivoted``): pivots selected
+  from the suffix column norms the sweep already produces, a
+  permutation-carrying ``(R, d, perm)`` state, an rcond-relative numerical
+  rank estimator, and the min-norm ``lstsq_pivoted`` solve.
+* ``monitor`` — streaming condition estimation for ``(R, d)`` states
+  (``cond_estimate`` / ``ConditionMonitor``) and the hyperbolic
+  ``DowndateGuard`` that refuses or damps downdates about to cross the
+  rank cliff (wired into ``solvers.qr_update`` / ``solvers.kalman``).
+* ``sketch`` — sketch-and-precondition least squares (``sketch_lstsq``):
+  CountSketch/SRHT embedding -> GGR QR of the sketch -> right-preconditioned
+  LSQR, with the TSQR tree coupling reused for multi-shard sketch reduction.
+
+Serving integration: the ``lstsq_pivoted`` request kind in ``repro.serve``
+dispatches batched ``pivoted.lstsq_pivoted`` solves through the async engine.
+"""
+from .monitor import (
+    CondState,
+    ConditionMonitor,
+    DowndateGuard,
+    cond_estimate,
+)
+from .pivoted import (
+    PivotedLstsq,
+    PivotedQR,
+    estimate_rank,
+    ggr_qr_pivoted,
+    lstsq_pivoted,
+)
+from .sketch import (
+    SketchedLstsq,
+    countsketch,
+    lsqr,
+    sketch_qr,
+    sketch_lstsq,
+    srht,
+)
+
+__all__ = [
+    "CondState",
+    "ConditionMonitor",
+    "DowndateGuard",
+    "PivotedLstsq",
+    "PivotedQR",
+    "SketchedLstsq",
+    "cond_estimate",
+    "countsketch",
+    "estimate_rank",
+    "ggr_qr_pivoted",
+    "lsqr",
+    "lstsq_pivoted",
+    "sketch_lstsq",
+    "sketch_qr",
+    "srht",
+]

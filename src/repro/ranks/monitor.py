@@ -1,0 +1,202 @@
+"""Streaming condition monitoring and the hyperbolic downdate guard.
+
+A streaming ``(R, d)`` state drifts toward the rank cliff one update at a
+time — an over-forgotten window, a collinear burst of observations — and the
+``|diag R|`` ratio the old health gauge used only *lower-bounds* the damage.
+This module carries a real 2-norm condition estimate alongside the state:
+
+* ``cond_estimate`` — power iteration (for ``smax``) + inverse iteration via
+  the existing triangular solves (for ``smin``) on a triangular factor.
+  Functional and jit-safe; pass the previous ``CondState`` back in and one
+  iteration per update suffices, because the singular vectors move slowly
+  under rank-1-ish updates — that persistence is what makes the estimate
+  *incremental* (O(n^2) per refresh, vs O(n^3) from scratch).
+* ``ConditionMonitor`` — eager host-side wrapper that tracks a stream of
+  factors, records ``<layer>.cond_estimate`` gauges through ``repro.obs``,
+  and counts alarm crossings.
+* ``DowndateGuard`` — the hyperbolic safety valve for ``qr_downdate_row``:
+  a downdate is hyperbolic (it *removes* mass), and the LINPACK cascade's
+  ``alpha^2 = 1 - ||R^{-T} u||^2`` measures exactly how close the removed
+  row comes to annihilating a direction of the factor.  The guard refuses
+  (or damps to the ``tau`` floor) any downdate with ``alpha^2 < tau``
+  instead of letting it push the state over the rank cliff.  Wired through
+  ``solvers.qr_update.qr_downdate_row(guard=...)`` and
+  ``RecursiveLS.forget``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.solvers.lstsq import solve_triangular
+
+__all__ = ["CondState", "ConditionMonitor", "DowndateGuard", "cond_estimate"]
+
+
+class CondState(NamedTuple):
+    """One condition estimate plus the singular-vector carry that makes the
+    next refresh incremental."""
+
+    cond: jax.Array   # () estimated cond_2(R) = smax / smin
+    smax: jax.Array   # () largest-singular-value estimate
+    smin: jax.Array   # () smallest-singular-value estimate
+    vmax: jax.Array   # (n,) right singular vector carry for smax
+    vmin: jax.Array   # (n,) right singular vector carry for smin
+
+
+def _seed_vec(n: int, dtype) -> jax.Array:
+    """Deterministic, all-direction-touching start vector (LINPACK-style
+    alternating ramp) — no RNG so the estimate is reproducible under jit."""
+    i = jnp.arange(n, dtype=dtype)
+    v = jnp.where(i % 2 == 0, 1.0, -1.0) * (1.0 + i / n)
+    return v / jnp.linalg.norm(v)
+
+
+def cond_estimate(R: jax.Array, state: CondState | None = None,
+                  iters: int = 4) -> CondState:
+    """Estimate ``cond_2(R)`` of a triangular factor; jit/vmap-safe.
+
+    ``iters`` rounds of power iteration on ``R^T R`` drive ``vmax`` toward
+    the top right-singular vector, and inverse iteration (two triangular
+    solves per round — the same ``_tri_solve_lower`` scan the solvers use)
+    drives ``vmin`` toward the bottom one; the final Rayleigh-quotient
+    norms ``||R v||`` are the singular-value estimates.  Estimates approach
+    the truth from below (smax) / above (smin), so the reported cond is a
+    slight *underestimate* — pair alarm thresholds with headroom.
+
+    Passing the previous ``CondState`` reuses its singular-vector carry:
+    after a streaming append/downdate one iteration re-converges, which is
+    the incremental O(n^2) refresh ``ConditionMonitor`` runs per update.
+    A numerically singular R saturates the inverse iteration through the
+    eps-guarded solves rather than dividing by zero (cond comes back huge
+    but finite).
+    """
+    f32 = jnp.promote_types(R.dtype, jnp.float32)
+    Ra = jnp.triu(R).astype(f32)
+    n = Ra.shape[0]
+    if state is None:
+        vmax = _seed_vec(n, f32)
+        vmin = _seed_vec(n, f32)[::-1]
+    else:
+        vmax, vmin = state.vmax.astype(f32), state.vmin.astype(f32)
+
+    tiny = jnp.finfo(f32).tiny
+
+    def body(_, carry):
+        vmax, vmin = carry
+        w = Ra.T @ (Ra @ vmax)
+        vmax = w / jnp.maximum(jnp.linalg.norm(w), tiny)
+        y = solve_triangular(Ra, vmin, trans=True)   # R^T y = v
+        z = solve_triangular(Ra, y)                  # R z = y
+        vmin = z / jnp.maximum(jnp.linalg.norm(z), tiny)
+        return vmax, vmin
+
+    vmax, vmin = jax.lax.fori_loop(0, iters, body, (vmax, vmin))
+    smax = jnp.linalg.norm(Ra @ vmax)
+    smin = jnp.linalg.norm(Ra @ vmin)
+    # the eps-guarded solves *annihilate* an exactly-collapsed direction
+    # instead of blowing up on it, which would leave the iterate blind to a
+    # zero pivot; smin <= min|r_ii| for any triangular factor, so clamping
+    # restores the honest (still upper) bound there
+    smin = jnp.minimum(smin, jnp.min(jnp.abs(jnp.diagonal(Ra))))
+    cond = smax / jnp.maximum(smin, tiny)
+    return CondState(cond=cond, smax=smax, smin=smin, vmax=vmax, vmin=vmin)
+
+
+class ConditionMonitor:
+    """Host-side condition tracker for a stream of triangular factors.
+
+    Call ``observe(R)`` after each append/downdate: the first call pays the
+    full ``iters`` refresh, subsequent calls ride the singular-vector carry
+    with ``refresh_iters`` (default 1) — the incremental estimate.  Records
+    ``<layer>.cond_estimate`` (gauge) and ``<layer>.cond_alarms`` (counter,
+    when ``alarm_cond`` is crossed) through ``repro.obs``; everything
+    no-ops when handed tracers, so the monitor can sit next to jitted
+    pipelines and only fire on eager flush results.
+    """
+
+    def __init__(self, layer: str = "solvers", alarm_cond: float | None = None,
+                 iters: int = 4, refresh_iters: int = 1):
+        self.layer = layer
+        self.alarm_cond = alarm_cond
+        self.iters = iters
+        self.refresh_iters = refresh_iters
+        self.state: CondState | None = None
+        self.alarms = 0
+
+    def observe(self, R, **labels) -> float:
+        """Fold one factor into the estimate; returns the current cond."""
+        if isinstance(R, jax.core.Tracer):
+            return float("nan")
+        it = self.iters if self.state is None else self.refresh_iters
+        self.state = cond_estimate(jnp.asarray(R), self.state, iters=it)
+        cond = float(self.state.cond)
+        if obs.enabled():
+            obs.gauge(f"{self.layer}.cond_estimate", **labels).set(cond)
+            obs.gauge(f"{self.layer}.smin_estimate", **labels).set(
+                float(self.state.smin))
+        if self.alarm_cond is not None and cond > self.alarm_cond:
+            self.alarms += 1
+            if obs.enabled():
+                obs.counter(f"{self.layer}.cond_alarms", **labels).inc()
+        return cond
+
+
+class DowndateGuard(NamedTuple):
+    """Policy for downdates that would cross the rank cliff.
+
+    The downdate cascade computes ``alpha^2 = 1 - ||R^{-T} u||^2``; at 0 the
+    removed row exactly annihilates a direction of the factor and the
+    hyperbolic rotation blows up.  ``tau`` is the floor on ``alpha^2``:
+
+    * ``mode="damp"``  — shrink the removed row just enough that
+      ``alpha^2 == tau`` (removes *most* of the observation, keeps the
+      factor at the guard's distance from singularity).  The default.
+    * ``mode="refuse"`` — return the state unchanged (jit-safe ``where``).
+    * ``mode="raise"``  — raise ``FloatingPointError`` with a diagnostic;
+      eager-only (under tracing it degrades to "refuse" semantics, since a
+      traced value cannot raise).
+
+    Hashable (NamedTuple of scalars) so it can ride static arguments.
+    """
+
+    tau: float = 1e-6
+    mode: str = "damp"
+
+    def validate(self) -> "DowndateGuard":
+        if not 0.0 < self.tau < 1.0:
+            raise ValueError(f"guard tau must be in (0, 1), got {self.tau}")
+        if self.mode not in ("damp", "refuse", "raise"):
+            raise ValueError(f"unknown guard mode {self.mode!r}")
+        return self
+
+
+def guard_downdate_q(qv: jax.Array, guard: DowndateGuard):
+    """Apply a guard to the downdate's solved direction ``q = R^{-T} u``.
+
+    Returns ``(q', triggered)``: ``q'`` is the (possibly damped) direction
+    whose seeded suffix cascade stays at least ``tau`` from the cliff, and
+    ``triggered`` is a traced bool.  "refuse" leaves q untouched — the
+    caller keeps the original state when triggered.  Called by
+    ``solvers.qr_update._downdate_core``; eager "raise" happens there,
+    where the diagnostic can name the operation.
+    """
+    qq = qv @ qv
+    triggered = (1.0 - qq) < guard.tau
+    if guard.mode == "damp":
+        # scale so ||q'||^2 = 1 - tau  =>  alpha'^2 = tau exactly
+        g = jnp.sqrt((1.0 - guard.tau) / jnp.maximum(qq, guard.tau))
+        qv = jnp.where(triggered, g * qv, qv)
+    return qv, triggered
+
+
+def _record_guard_trigger(triggered, layer: str = "solvers") -> None:
+    """Count eager guard trips (no-op under tracing / null registry)."""
+    if isinstance(triggered, jax.core.Tracer) or not obs.enabled():
+        return
+    if bool(np.asarray(triggered)):
+        obs.counter(f"{layer}.downdate_guard_trips").inc()

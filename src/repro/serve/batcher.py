@@ -172,7 +172,8 @@ class ContinuousBatcher:
     def flush(self, kind: str | None = None) -> int:
         """Close every (matching) open batch now; returns requests served.
 
-        ``kind`` (None | "append" | "lstsq" | "kalman") restricts the flush
+        ``kind`` (None | "append" | "lstsq" | "kalman" | "lstsq_pivoted")
+        restricts the flush
         to matching groups — e.g. a latency-sensitive deployment can flush
         one-shot solves more often than state updates.  Results become
         available via ``result(ticket)``; each closed batch advances its

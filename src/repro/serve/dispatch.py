@@ -2,7 +2,7 @@
 
 One ``Dispatcher`` owns everything between "a closed batch of typed
 requests" and "per-request results": per-kind executors (append / lstsq /
-kalman), the shard_map + ``pad_batch`` sharded path, the per-server
+kalman / lstsq_pivoted), the shard_map + ``pad_batch`` sharded path, the per-server
 executable cache, and the double-buffering that overlaps host-side stacking
 of batch k+1 with batch k's device dispatch.
 
@@ -109,6 +109,36 @@ def _build_sharded_lstsq(mesh, mesh_axis: str):
         _batched_lstsq, mesh=mesh,
         in_specs=(P(mesh_axis), P(mesh_axis)),
         out_specs=(P(mesh_axis), P(mesh_axis)),
+    ))
+
+
+@jax.jit
+def _batched_lstsq_pivoted(Ab, bb):
+    """Rank-revealing batch: (x, resid, rank) per problem.
+
+    The padded lanes are all-zero problems, whose pivoted sweep is an exact
+    fixed point (rank 0, x = 0), so slicing them off is lossless — same
+    contract as the unpivoted path."""
+    from repro.ranks import lstsq_pivoted
+
+    def one(A, b):
+        fit = lstsq_pivoted(A, b)
+        return fit.x, fit.resid, fit.rank
+
+    return jax.vmap(one)(Ab, bb)
+
+
+def _build_sharded_lstsq_pivoted(mesh, mesh_axis: str):
+    """jit'd shard_map pivoted-lstsq dispatch for one mesh (cached per
+    server)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distributed import shard_map_compat
+
+    return jax.jit(shard_map_compat(
+        _batched_lstsq_pivoted, mesh=mesh,
+        in_specs=(P(mesh_axis), P(mesh_axis)),
+        out_specs=(P(mesh_axis), P(mesh_axis), P(mesh_axis)),
     ))
 
 
@@ -238,7 +268,7 @@ class Dispatcher:
         bb = self.block_b if dtype is None else self.block_b_for(dtype)
         if self.mesh is not None:
             gran = self.mesh.shape[self.mesh_axis] * (
-                1 if kind == "lstsq" else bb)
+                1 if kind in ("lstsq", "lstsq_pivoted") else bb)
         else:
             gran = bb
         return -(-nb // gran) * gran
@@ -349,8 +379,40 @@ class Dispatcher:
         flops = nb * obs.ggr_append_flops(w + n, n + p, w + n + 1)
         return outs, flops, Rn
 
+    def _exec_lstsq_pivoted(self, chunk):
+        """Stack + pad one rank-revealing lstsq chunk: the vmapped QRCP
+        min-norm solve (``repro.ranks.lstsq_pivoted``), shard_mapped over
+        the mesh when one is set.  Per-request result is ``(x, resid,
+        rank)`` — rank stays int32, never down-cast to the storage dtype."""
+        nb = len(chunk)
+        store_dt = str(chunk[0].arrays[0].dtype)
+        compute_dt, _ = self._chunk_precision(store_dt)
+        P = self.padded_chunk(nb, "lstsq_pivoted", store_dt)
+        Ab = _pad_to(jnp.stack([r.arrays[0] for r in chunk]), P)
+        bb = _pad_to(jnp.stack([r.arrays[1] for r in chunk]), P)
+        if compute_dt != store_dt:
+            Ab, bb = Ab.astype(compute_dt), bb.astype(compute_dt)
+        m, n = Ab.shape[1], Ab.shape[2]
+        k = bb.shape[2] if bb.ndim > 2 else 1
+        if self.mesh is None:
+            xs, rs, rk = _batched_lstsq_pivoted(Ab, bb)
+        else:
+            fn = self.executables.get(
+                ("lstsq_pivoted", self.mesh, self.mesh_axis),
+                lambda: _build_sharded_lstsq_pivoted(self.mesh,
+                                                     self.mesh_axis))
+            xs, rs, rk = fn(Ab, bb)
+        xs = xs[:nb].astype(store_dt)  # down-cast to storage on return
+        rs = rs[:nb].astype(store_dt)
+        rk = rk[:nb]
+        outs = [(xs[i], rs[i], rk[i]) for i in range(nb)]
+        # pivoting adds the per-step suffix-norm matrix + swap on top of the
+        # plain augmented sweep: ~2x the unpivoted macro-op count
+        return outs, nb * 2.0 * obs.lstsq_flops(m, n, k), None
+
     _EXECUTORS = {"append": _exec_append, "lstsq": _exec_lstsq,
-                  "kalman": _exec_kalman}
+                  "kalman": _exec_kalman,
+                  "lstsq_pivoted": _exec_lstsq_pivoted}
 
     # ------------------------------------------------------------ dispatch
     def dispatch(self, key: tuple, reqs: list) -> tuple[list, list[InFlight]]:

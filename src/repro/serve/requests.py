@@ -1,7 +1,8 @@
 """Typed requests, tickets, and group signatures for the serving engine.
 
 One request = one small QR problem (a row-append update, a one-shot
-least-squares solve, or an SRIF Kalman step).  Requests that may legally be
+least-squares solve — plain or rank-revealing pivoted — or an SRIF Kalman
+step).  Requests that may legally be
 stacked into a single fused dispatch share a **group signature**: a hashable
 tuple of the kind plus every operand's ``(shape, dtype)`` — dtypes included
 so stacking never silently promotes a request (same-shape f32 and f64
@@ -28,7 +29,7 @@ import jax.numpy as jnp
 
 __all__ = ["KINDS", "Request", "Ticket", "group_signature", "make_request"]
 
-KINDS = ("append", "lstsq", "kalman")
+KINDS = ("append", "lstsq", "kalman", "lstsq_pivoted")
 
 # kind -> (required operand names, optional operand names).  Optional
 # operands are all-or-nothing per *pair* for append (d with Y) and
@@ -38,6 +39,7 @@ _SPECS = {
     "append": (("R", "U"), ("d", "Y")),
     "lstsq": (("A", "b"), ()),
     "kalman": (("R", "d", "F", "Qi", "H", "z"), ("G",)),
+    "lstsq_pivoted": (("A", "b"), ()),
 }
 
 
@@ -51,7 +53,7 @@ class Ticket:
     same group expires it (see ``ResultStore`` retention).
     """
 
-    kind: str          # "append" | "lstsq" | "kalman"
+    kind: str          # "append" | "lstsq" | "kalman" | "lstsq_pivoted"
     group: tuple       # group signature the request queued under
     index: int         # position within its group's batch cycle
     cycle: int         # the group's batch cycle the request belongs to

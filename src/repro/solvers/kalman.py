@@ -53,6 +53,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.ggr import ggr_qr2, ggr_triangularize
 
 from .lstsq import solve_triangular
@@ -232,7 +233,14 @@ def kf_step(state: KalmanState, F: jax.Array, Qi: jax.Array, H: jax.Array,
     w = Qi.shape[0]
     X = _step_stacked(state.R, state.d, F, Qi, H, jnp.asarray(z), G)
     out = ggr_triangularize(X, w + n)
-    return KalmanState(R=jnp.triu(out[w:w + n, w:w + n]), d=out[w:w + n, w + n],
+    R_new = jnp.triu(out[w:w + n, w:w + n])
+    # posterior-factor health: with a collector installed the gauge now
+    # carries the real incremental condition estimate (repro.obs.health /
+    # repro.ranks.monitor); no-op under scan/jit tracing.  Long-running
+    # fleets wanting per-track trend + alarms should attach a
+    # ``repro.ranks.ConditionMonitor`` to their flush results instead.
+    obs.factor_health(R_new, "kalman")
+    return KalmanState(R=R_new, d=out[w:w + n, w + n],
                        step=state.step + 1)
 
 
@@ -297,6 +305,9 @@ def kf_step_batched(R: jax.Array, d: jax.Array, F: jax.Array, Qi: jax.Array,
                                 block_b, precision)
         out = fn(padded)[:B]
     R_new = jnp.triu(out[:, w:w + n, w:w + n])
+    # batch-wide posterior condition gauge (worst member estimated; see
+    # obs.factor_health) — eager fleets only, a no-op under tracing
+    obs.factor_health(R_new, "kalman")
     return R_new, out[:, w:w + n, w + n]
 
 

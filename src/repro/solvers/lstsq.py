@@ -69,21 +69,53 @@ class LstsqResult(NamedTuple):
     d: jax.Array       # (n, k) Q^T b (top rows)
 
 
-def ggr_lstsq(A: jax.Array, b: jax.Array) -> LstsqResult:
+# A collapsed pivot sits at roundoff level relative to the largest one;
+# anything below this many eps is rank-collapse junk, not data.  Kept well
+# under 1/cond of any problem the unpivoted solver can honestly handle.
+_RANK_COLLAPSE_EPS_MULT = 32.0
+
+
+def ggr_lstsq(A: jax.Array, b: jax.Array,
+              rcond: float | None = None) -> LstsqResult:
     """min ||Ax - b|| for full-column-rank A (m >= n) via augmented GGR.
 
     One sweep triangularizes ``[A | b]`` to ``[R | d; 0 | r]``; x solves
     R x = d and ||r|| is the residual norm — b never needs a separate
     Q^T multiply, it is just extra trailing columns in the DET2 grids.
+
+    ``rcond`` is the rank-deficiency escape hatch: when given, the solve
+    routes to the pivoted min-norm path (``repro.ranks.lstsq_pivoted``) and
+    the returned ``(R, d)`` are the *pivoted* factors — ``R`` is the QRCP
+    factor of ``A[:, perm]``, so streaming updates must not assume original
+    column order.  With ``rcond=None`` (the default) a rank-collapsed pivot
+    raises a diagnostic ``ValueError`` on eager calls instead of silently
+    dividing noise by it (the historical behaviour); traced/jitted calls
+    cannot inspect values and keep the unchecked fast path.
     """
     m, n = A.shape
     if m < n:
         raise ValueError(f"ggr_lstsq requires m >= n, got {A.shape}")
+    if rcond is not None:
+        from repro.ranks import lstsq_pivoted  # lazy: breaks the import cycle
+
+        fit = lstsq_pivoted(A, b, rcond=rcond)
+        return LstsqResult(x=fit.x, resid=fit.resid, R=fit.R, d=fit.d)
     vec = b.ndim == 1
     B = b[:, None] if vec else b
     X = _triangularize_auto(jnp.concatenate([A, B], axis=1), n)
     R = jnp.triu(X[:n, :n])
     d = X[:n, n:]
+    if not isinstance(R, jax.core.Tracer):
+        diag = jnp.abs(jnp.diagonal(R))
+        dmin, dmax = float(jnp.min(diag)), float(jnp.max(diag))
+        cliff = _RANK_COLLAPSE_EPS_MULT * float(jnp.finfo(R.dtype).eps)
+        if dmin <= dmax * cliff:
+            raise ValueError(
+                f"ggr_lstsq: rank-deficient input — min |diag R| = {dmin:.3e} "
+                f"vs max {dmax:.3e} (below {_RANK_COLLAPSE_EPS_MULT:g}*eps "
+                "relative).  The triangular solve would amplify noise by "
+                "1/|r_ii|.  Pass rcond= to get the pivoted min-norm solution "
+                "(repro.ranks.lstsq_pivoted), e.g. rcond=1e-10 for f64.")
     # numerical-health sensors (no-ops unless a collector is installed, and
     # under jit/vmap tracing; the orthogonality audit is sampled — see
     # repro.obs.health)
@@ -152,14 +184,19 @@ class RecursiveLS:
         R, d = qr_append_rows(g * state.R, U, g * state.d, Y)
         return RLSState(R=R, d=d, count=state.count + U.shape[0])
 
-    def forget(self, state: RLSState, u: jax.Array, y: jax.Array) -> RLSState:
+    def forget(self, state: RLSState, u: jax.Array, y: jax.Array,
+               guard=None) -> RLSState:
         """Remove a previously-observed row (sliding-window downdate).
 
         Only meaningful with lam == 1.0 (with exponential forgetting the old
         row's weight has decayed, so the unscaled downdate would overshoot).
+        ``guard`` (a ``repro.ranks.DowndateGuard``) bounds the hyperbolic
+        step away from the rank cliff — a shrinking window over nearly
+        collinear features is exactly where an unguarded forget destroys
+        the factor; see ``qr_downdate_row``.
         """
         y_row = jnp.asarray(y, state.R.dtype).reshape(self.k)
-        R, d = qr_downdate_row(state.R, u, state.d, y_row)
+        R, d = qr_downdate_row(state.R, u, state.d, y_row, guard=guard)
         return RLSState(R=R, d=d, count=state.count - 1)
 
     def solve(self, state: RLSState) -> jax.Array:

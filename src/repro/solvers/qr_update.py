@@ -194,7 +194,7 @@ def qr_append_rows_batched(R: jax.Array, U: jax.Array,
     return R_new, out[:, :n, n:]
 
 
-def _downdate_core(R, u, d, y):
+def _downdate_core(R, u, d, y, guard=None):
     """Closed-form Givens downdate (macro-op form).  See module docstring.
 
     Solving R^T q = u places the removed row in the rotation cascade's last
@@ -202,12 +202,34 @@ def _downdate_core(R, u, d, y):
     (k, l) form because prod_{i<j} c_i = t_j / t_0.  The rhs recurrence
     zeta_k = (zeta_{k-1} - s_k d_k)/c_k telescopes the same way into a
     prefix dot:  zeta_{k-1} = (t_0 y - sum_{j<k} q_j d_j) / t_k.
+
+    ``guard`` (a ``repro.ranks.DowndateGuard``) intercepts the hyperbolic
+    blow-up: ``alpha^2 = 1 - ||q||^2`` measures the distance to the rank
+    cliff, and the guard damps the removed row, refuses the downdate, or
+    raises before the cascade divides by a vanishing ``alpha``.
     """
     n = R.shape[0]
     f32 = jnp.promote_types(R.dtype, jnp.float32)
     Ra = R.astype(f32)
     qv = _tri_solve_lower(Ra.T, u.astype(f32)[:, None])[:, 0]
     eps = _eps_for(f32)
+    triggered = None
+    if guard is not None:
+        # lazy: solvers <-> ranks would otherwise be a load-time cycle
+        from repro.ranks.monitor import _record_guard_trigger, guard_downdate_q
+
+        guard.validate()
+        qq0 = qv @ qv
+        if guard.mode == "raise" and not isinstance(qq0, jax.core.Tracer):
+            if float(1.0 - qq0) < guard.tau:
+                raise FloatingPointError(
+                    f"downdate rejected by guard: alpha^2 = 1 - ||R^-T u||^2 "
+                    f"= {float(1.0 - qq0):.3e} < tau = {guard.tau:.1e} — "
+                    "removing this row would push the factor across the rank "
+                    "cliff.  Re-factorize the window, or use "
+                    "DowndateGuard(mode='damp'/'refuse').")
+        qv, triggered = guard_downdate_q(qv, guard)
+        _record_guard_trigger(triggered)
     alpha2 = jnp.maximum(1.0 - qv @ qv, eps)  # <=0 means u not in the factorization
     suff = jnp.cumsum((qv * qv)[::-1])[::-1]
     t = jnp.sqrt(alpha2 + suff)  # seeded suffix norms, t_n = alpha
@@ -234,31 +256,50 @@ def _downdate_core(R, u, d, y):
     R_new = jnp.triu(sg[:, None] * R_new)
     if d_new is not None:
         d_new = sg[:, None] * d_new
+    if triggered is not None and guard.mode in ("refuse", "raise"):
+        # refuse (and raise-under-tracing, which cannot throw): keep the
+        # original state when the guard fired — a jit-safe select
+        R_new = jnp.where(triggered, Ra, R_new)
+        if d_new is not None:
+            d_new = jnp.where(triggered, d.astype(d_new.dtype), d_new)
     return R_new.astype(R.dtype), None if d is None else d_new.astype(R.dtype)
 
 
 def qr_downdate_row(R: jax.Array, u: jax.Array, d: jax.Array | None = None,
-                    y: jax.Array | None = None):
+                    y: jax.Array | None = None, *, guard=None):
     """Remove observation row (u, y) from the state — sliding-window forget.
 
     ``u`` must be a row previously incorporated into R (a downdate of a row
     not in the span is clamped, not detected).  Returns R' or (R', d').
+
+    ``guard``: an optional ``repro.ranks.DowndateGuard``.  Downdating is
+    hyperbolic — it removes information — and a row that carries (nearly)
+    all remaining mass in some direction drives ``alpha^2 = 1 - ||R^-T u||^2``
+    to zero, after which the factor is numerically singular.  The guard
+    bounds ``alpha^2`` from below by ``tau``: ``mode="damp"`` shrinks the
+    removed row to sit exactly at the floor, ``"refuse"`` keeps the state
+    unchanged, ``"raise"`` throws a ``FloatingPointError`` diagnostic
+    (eager calls only; under tracing it degrades to refuse).
     """
     if (d is None) != (y is None):
         raise ValueError("pass both d and y, or neither")
-    R_new, d_new = _downdate_core(R, u, d, y)
+    R_new, d_new = _downdate_core(R, u, d, y, guard=guard)
     if d is None:
         return R_new
     return R_new, d_new
 
 
 def qr_rank1_update(R: jax.Array, v: jax.Array, weight: jax.Array | float,
-                    d: jax.Array | None = None, y: jax.Array | None = None):
+                    d: jax.Array | None = None, y: jax.Array | None = None,
+                    *, guard=None):
     """Symmetric rank-1 Gram update: R'^T R' = R^T R + weight·v v^T.
 
     With rhs state: R'^T d' = R^T d + weight·v y.  ``weight >= 0`` appends the
     scaled row sqrt(w)·v; ``weight < 0`` downdates it (branch via lax.cond so
     the sign may be a traced value — e.g. an exponential-forgetting schedule).
+    ``guard`` protects the downdate branch (see ``qr_downdate_row``); avoid
+    ``mode="raise"`` here — the branch runs under ``lax.cond`` tracing, where
+    raise degrades to refuse.
     """
     if (d is None) != (y is None):
         raise ValueError("pass both d and y, or neither")
@@ -271,7 +312,7 @@ def qr_rank1_update(R: jax.Array, v: jax.Array, weight: jax.Array | float,
             return qr_append_rows(R, u[None, :])
 
         def down(_):
-            return qr_downdate_row(R, u)
+            return qr_downdate_row(R, u, guard=guard)
 
         return jax.lax.cond(w >= 0, up, down, None)
 
@@ -281,6 +322,6 @@ def qr_rank1_update(R: jax.Array, v: jax.Array, weight: jax.Array | float,
         return qr_append_rows(R, u[None, :], d, yr)
 
     def down(_):
-        return qr_downdate_row(R, u, d, yr[0])
+        return qr_downdate_row(R, u, d, yr[0], guard=guard)
 
     return jax.lax.cond(w >= 0, up, down, None)

@@ -6,8 +6,10 @@ place instead of drifting apart file by file.
 """
 from .error_harness import (
     DEFAULT_CONDS,
+    DEFAULT_RANK_CONDS,
     DEFAULT_SHAPES,
     Case,
+    RankCase,
     backward_error,
     budget_is_meaningful,
     dtype_eps,
@@ -19,13 +21,17 @@ from .error_harness import (
     gram_residual,
     matrix_suite,
     orthogonality_loss,
+    rank_deficient_matrix,
+    rank_deficient_suite,
     sign_align,
 )
 
 __all__ = [
     "Case",
     "DEFAULT_CONDS",
+    "DEFAULT_RANK_CONDS",
     "DEFAULT_SHAPES",
+    "RankCase",
     "backward_error",
     "budget_is_meaningful",
     "dtype_eps",
@@ -37,5 +43,7 @@ __all__ = [
     "gram_residual",
     "matrix_suite",
     "orthogonality_loss",
+    "rank_deficient_matrix",
+    "rank_deficient_suite",
     "sign_align",
 ]

@@ -53,7 +53,9 @@ import numpy as np
 __all__ = [
     "Case",
     "DEFAULT_CONDS",
+    "DEFAULT_RANK_CONDS",
     "DEFAULT_SHAPES",
+    "RankCase",
     "backward_error",
     "budget_is_meaningful",
     "dtype_eps",
@@ -65,11 +67,17 @@ __all__ = [
     "gram_residual",
     "matrix_suite",
     "orthogonality_loss",
+    "rank_deficient_matrix",
+    "rank_deficient_suite",
     "sign_align",
 ]
 
 DEFAULT_SHAPES: Tuple[Tuple[int, int], ...] = ((64, 48), (96, 80), (192, 64))
 DEFAULT_CONDS: Tuple[float, ...] = (1e0, 1e2, 1e4, 1e6, 1e8)
+# conds of the *nonzero* spectrum in the rank-deficient suite: pushes all
+# the way to 1e12 — the rank-revealing paths must hold where the unpivoted
+# solver has long since given up
+DEFAULT_RANK_CONDS: Tuple[float, ...] = (1e0, 1e4, 1e8, 1e12)
 
 
 def dtype_eps(dtype) -> float:
@@ -123,6 +131,56 @@ def matrix_suite(shapes: Sequence[Tuple[int, int]] = DEFAULT_SHAPES,
             A = graded_matrix(m, n, cond, seed=seed + 97 * i + j,
                               spectrum=spectrum)
             yield Case(f"{m}x{n}@cond={cond:.0e}", A, float(cond))
+
+
+class RankCase(NamedTuple):
+    """One rank-deficient test problem: f64 matrix ``A`` with exactly
+    ``rank`` nonzero singular values spanning ``cond``."""
+
+    name: str
+    A: np.ndarray
+    cond: float
+    rank: int
+
+
+def rank_deficient_matrix(m: int, n: int, rank: int, cond: float = 1e4,
+                          seed: int = 0) -> np.ndarray:
+    """(m, n) f64 matrix of *exact* rank ``rank``: the nonzero singular
+    values are geomspaced from 1 down to 1/cond, the remaining ``n - rank``
+    are exactly zero.  The clean rank gap is what makes these suites honest
+    oracles — every sensible threshold convention (singular values, |diag R|
+    of a pivoted factor) detects the same rank."""
+    if not 1 <= rank <= min(m, n):
+        raise ValueError(f"need 1 <= rank <= min(m, n), got rank={rank} "
+                         f"for {(m, n)}")
+    if cond < 1.0:
+        raise ValueError(f"cond must be >= 1, got {cond}")
+    rng = np.random.default_rng(seed)
+    U, _ = np.linalg.qr(rng.standard_normal((m, n)))
+    V, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.zeros(n)
+    s[:rank] = np.geomspace(1.0, 1.0 / cond, rank) if rank > 1 else 1.0
+    return (U * s) @ V.T
+
+
+def rank_deficient_suite(shapes: Sequence[Tuple[int, int]] = DEFAULT_SHAPES,
+                         conds: Sequence[float] = DEFAULT_RANK_CONDS,
+                         seed: int = 0) -> Iterator[RankCase]:
+    """The (shape x cond x rank) grid of exactly-rank-deficient problems.
+
+    Per shape the ranks exercised are a thin subspace (3), half rank
+    (n // 2), and one short of full (n - 1) — the regimes where pivot
+    selection, rank estimation, and the min-norm solve each fail
+    differently when broken."""
+    for i, (m, n) in enumerate(shapes):
+        for j, cond in enumerate(conds):
+            for rank in sorted({3, n // 2, n - 1}):
+                if not 1 <= rank < n:
+                    continue
+                A = rank_deficient_matrix(m, n, rank, cond,
+                                          seed=seed + 977 * i + 31 * j + rank)
+                yield RankCase(f"{m}x{n}@rank={rank}@cond={cond:.0e}",
+                               A, float(cond), rank)
 
 
 # ------------------------------------------------------------------ metrics

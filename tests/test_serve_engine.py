@@ -412,7 +412,7 @@ def test_engine_submit_entrypoint_matches_submit_star():
 
     reqs = make_workload(8, n=5, rows=2, k=1, seed=61)
     kinds = [r[0] for r in reqs]
-    assert set(kinds) == {"append", "lstsq", "kalman"}
+    assert set(kinds) == {"append", "lstsq", "kalman", "lstsq_pivoted"}
     eng = ContinuousBatcher(Dispatcher(backend="reference"))
     tickets = _submit_reqs(eng, reqs)
     assert [t.kind for t in tickets] == kinds

@@ -174,13 +174,14 @@ def test_kind_restricted_flush_keeps_other_groups_live():
     by_kind = {}
     for r, t in zip(reqs, tickets):
         by_kind.setdefault(r[0], []).append(t)
-    assert set(by_kind) == {"append", "lstsq", "kalman"}
+    assert set(by_kind) == {"append", "lstsq", "kalman", "lstsq_pivoted"}
 
     served = server.flush(kind="kalman")
     assert served == len(by_kind["kalman"])
     for t in by_kind["kalman"]:
         server.result(t)
-    for t in by_kind["append"] + by_kind["lstsq"]:
+    for t in (by_kind["append"] + by_kind["lstsq"]
+              + by_kind["lstsq_pivoted"]):
         with pytest.raises(KeyError, match="not yet flushed"):
             server.result(t)
 
@@ -192,7 +193,7 @@ def test_kind_restricted_flush_keeps_other_groups_live():
     for t in by_kind["kalman"]:
         server.result(t)
     server.flush()
-    for t in by_kind["append"]:
+    for t in by_kind["append"] + by_kind["lstsq_pivoted"]:
         server.result(t)
 
 
@@ -212,7 +213,8 @@ def test_deadline_close_resolves_like_explicit_flush():
     reqs = make_workload(8, n=5, rows=2, k=1, seed=55)
     clock = Clock()
     tiers = {k: LatencyTier(deadline=1.0) for k in ("append", "lstsq",
-                                                    "kalman")}
+                                                    "kalman",
+                                                    "lstsq_pivoted")}
     by_deadline = ContinuousBatcher(Dispatcher(backend="reference"),
                                     AdmissionPolicy(tiers=tiers),
                                     retain_cycles=None, clock=clock)

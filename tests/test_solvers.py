@@ -233,8 +233,9 @@ def test_qr_server_round_trip():
     from repro.solvers.kalman import KalmanState, kf_step
 
     reqs = make_workload(10, n=6, rows=3, k=1, seed=28)
-    # the mix must exercise all three kinds through one server
-    assert {r[0] for r in reqs} == {"append", "lstsq", "kalman"}
+    # the mix must exercise all four kinds through one server
+    assert {r[0] for r in reqs} == {"append", "lstsq", "kalman",
+                                    "lstsq_pivoted"}
     server = QRServer(backend="pallas", max_batch=4, interpret=True)
     tickets = _submit_all(server, reqs)
     assert server.pending() == len(reqs)
@@ -246,6 +247,15 @@ def test_qr_server_round_trip():
             x, resid = server.result(tk)
             xo = np.linalg.lstsq(r[1], r[2], rcond=None)[0]
             np.testing.assert_allclose(np.asarray(x), xo, rtol=1e-3, atol=1e-4)
+        elif r[0] == "lstsq_pivoted":
+            x, resid, rank = server.result(tk)
+            # the workload's pivoted problems are rank-deficient by
+            # construction; the oracle must share the rcond cut — an f64
+            # lstsq(rcond=None) would "see" full rank in the f32 noise
+            assert int(rank) < r[1].shape[1]
+            xo = np.linalg.lstsq(r[1].astype(np.float64),
+                                 r[2].astype(np.float64), rcond=1e-5)[0]
+            np.testing.assert_allclose(np.asarray(x), xo, atol=1e-4)
         elif r[0] == "kalman":
             Rn, dn = server.result(tk)
             st = KalmanState(R=jnp.asarray(r[1]), d=jnp.asarray(r[2]),
