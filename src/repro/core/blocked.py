@@ -52,6 +52,7 @@ import numpy as np
 
 from repro import obs
 from repro.kernels.backend import Precision, resolve_interpret, resolve_precision
+from repro.kernels.backend import forced_schedule as backend_forced_schedule
 from repro.kernels.ggr_apply import apply_factors_pallas
 from repro.kernels.ggr_panel import batched_geqrt_pallas, panel_factor_pallas
 from repro.kernels.ggr_update import batched_update_pallas, pad_to_tile
@@ -379,7 +380,14 @@ def ggr_triangularize_blocked(X: jax.Array, n_pivots: int | None = None,
     if schedule not in ("auto", "tree", "fused"):
         raise ValueError(f"unknown schedule {schedule!r}")
     itp = resolve_interpret(interpret)
-    sched = schedule if schedule != "auto" else ("tree" if itp else "fused")
+    forced = backend_forced_schedule()
+    if forced is not None:
+        # degraded-mode override (see kernels.backend.degraded_mode): the
+        # serving ladder's fused -> tree rung reaches through call layers
+        # that do not thread a schedule argument
+        sched = forced
+    else:
+        sched = schedule if schedule != "auto" else ("tree" if itp else "fused")
     accum_dtype = None
     if precision is not None:
         prec = resolve_precision(precision)

@@ -15,6 +15,7 @@ the resolved value — never ``None`` — is the jit cache key.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 from typing import NamedTuple
 
@@ -23,16 +24,64 @@ import jax.numpy as jnp
 
 from repro.obs import _state as _obs_state
 
-__all__ = ["default_interpret", "resolve_interpret",
-           "Precision", "resolve_precision"]
+__all__ = ["default_interpret", "resolve_interpret", "degraded_mode",
+           "forced_schedule", "Precision", "resolve_precision"]
+
+# Programmatic degraded-mode overrides (see ``degraded_mode``).  A dict, not
+# two globals, so one context push/pop restores both knobs atomically.
+_DEGRADED: dict = {}
+
+
+@contextlib.contextmanager
+def degraded_mode(interpret: bool | None = None, schedule: str | None = None):
+    """Force a slower-but-safer kernel configuration for the enclosed calls.
+
+    The serving degradation ladder's lever on code paths whose kernel knobs
+    are *not* threaded through the caller's signature (e.g. the blocked
+    driver inside ``ggr_lstsq`` three layers below a vmapped executor):
+
+    * ``interpret=True`` — every ``resolve_interpret`` in the dynamic extent
+      resolves to interpret mode (kernel bodies run as plain XLA ops), even
+      against an explicit ``interpret=False`` argument or the
+      ``REPRO_PALLAS_INTERPRET=0`` env pin: an emergency fallback outranks a
+      debug default.
+    * ``schedule="tree"`` — blocked drivers ignore their ``schedule``
+      argument and run the requested schedule (fused -> tree is the
+      compiled-path de-risking rung; see ``core.blocked``).
+
+    Re-entrant; inner contexts shadow outer ones and the previous state is
+    restored on exit.  Not thread-safe by design — the serving engine is a
+    single-threaded loop.
+    """
+    saved = dict(_DEGRADED)
+    if interpret is not None:
+        _DEGRADED["interpret"] = bool(interpret)
+    if schedule is not None:
+        if schedule not in ("tree", "fused"):
+            raise ValueError(f"unknown degraded schedule {schedule!r}")
+        _DEGRADED["schedule"] = schedule
+    try:
+        yield
+    finally:
+        _DEGRADED.clear()
+        _DEGRADED.update(saved)
+
+
+def forced_schedule() -> str | None:
+    """The ``degraded_mode`` schedule override, or None outside one."""
+    return _DEGRADED.get("schedule")
 
 
 def default_interpret() -> bool:
     """True iff Pallas kernels should run in interpret mode by default.
 
     Interpret mode only when the default backend is CPU; TPU and GPU
-    backends compile the kernels.  ``REPRO_PALLAS_INTERPRET`` overrides.
+    backends compile the kernels.  ``REPRO_PALLAS_INTERPRET`` overrides,
+    and an active ``degraded_mode(interpret=...)`` outranks both.
     """
+    forced = _DEGRADED.get("interpret")
+    if forced is not None:
+        return forced
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
@@ -47,7 +96,11 @@ def resolve_interpret(interpret: bool | None) -> bool:
     (``kernels.interpret_resolutions`` by mode) — a cheap census of how often
     kernel entry points are hit and which execution mode they chose.
     """
-    itp = default_interpret() if interpret is None else bool(interpret)
+    forced = _DEGRADED.get("interpret")
+    if forced is not None:
+        itp = forced
+    else:
+        itp = default_interpret() if interpret is None else bool(interpret)
     reg = _obs_state._active()
     if reg.enabled:
         reg.counter("kernels.interpret_resolutions",

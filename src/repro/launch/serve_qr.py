@@ -67,7 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.serve import ContinuousBatcher, Dispatcher, Ticket
+from repro.serve import (ContinuousBatcher, Dispatcher, ResilientDispatcher,
+                         Ticket)
 from repro.serve.requests import KINDS as _KINDS
 
 __all__ = ["QRServer", "make_workload"]
@@ -101,13 +102,15 @@ class QRServer:
     mesh_axis: str = "batch"     # dataclass importable before jax device init
     block_b: int = 8
     precision: object | None = None  # Precision | policy name | None
+    resilient: bool = False  # fault-tolerant dispatch (repro.serve.resilience)
 
     def __post_init__(self):
+        dispatcher_cls = ResilientDispatcher if self.resilient else Dispatcher
         self._engine = ContinuousBatcher(
-            Dispatcher(backend=self.backend, max_batch=self.max_batch,
-                       interpret=self.interpret, mesh=self.mesh,
-                       mesh_axis=self.mesh_axis, block_b=self.block_b,
-                       double_buffer=False, precision=self.precision),
+            dispatcher_cls(backend=self.backend, max_batch=self.max_batch,
+                           interpret=self.interpret, mesh=self.mesh,
+                           mesh_axis=self.mesh_axis, block_b=self.block_b,
+                           double_buffer=False, precision=self.precision),
             admit_max=None, retain_cycles=1)
 
     # -------------------------------------------------- legacy introspection
@@ -311,6 +314,11 @@ def main(argv=None):
                          "device_count=N)")
     ap.add_argument("--check", action="store_true",
                     help="cross-check a sample of results against the other backend")
+    ap.add_argument("--resilient", action="store_true",
+                    help="serve through the fault-tolerant dispatcher "
+                         "(failure domains, retry/degrade, quarantine; "
+                         "byte-compatible with the plain path when nothing "
+                         "fails)")
     ap.add_argument("--metrics", default=os.environ.get("REPRO_OBS_SNAPSHOT"),
                     metavar="PREFIX",
                     help="collect obs metrics and write PREFIX.jsonl + "
@@ -332,7 +340,8 @@ def main(argv=None):
         obs.install(reg)
 
     reqs = make_workload(args.requests, args.n, args.rows, args.nrhs)
-    server = QRServer(backend=args.backend, max_batch=args.max_batch, mesh=mesh)
+    server = QRServer(backend=args.backend, max_batch=args.max_batch,
+                      mesh=mesh, resilient=args.resilient)
 
     tickets = _submit_all(server, reqs)  # warmup flush compiles the kernels
     server.flush()

@@ -38,6 +38,7 @@ Metric catalog, span naming convention and profile-reading guide:
 from ._state import _active, collecting, install, uninstall
 from .export import (
     REQUIRED_ASYNC_SERVE_FAMILIES,
+    REQUIRED_RESILIENCE_FAMILIES,
     REQUIRED_SERVE_FAMILIES,
     load_jsonl,
     missing_families,
@@ -77,6 +78,7 @@ __all__ = [
     "NULL",
     "NullRegistry",
     "REQUIRED_ASYNC_SERVE_FAMILIES",
+    "REQUIRED_RESILIENCE_FAMILIES",
     "REQUIRED_SERVE_FAMILIES",
     "annotate_fn",
     "block_ready",

@@ -40,6 +40,7 @@ __all__ = [
     "missing_families",
     "REQUIRED_SERVE_FAMILIES",
     "REQUIRED_ASYNC_SERVE_FAMILIES",
+    "REQUIRED_RESILIENCE_FAMILIES",
 ]
 
 SCHEMA = "repro.obs/v1"
@@ -67,9 +68,24 @@ REQUIRED_ASYNC_SERVE_FAMILIES = REQUIRED_SERVE_FAMILIES + (
     "serve.requests_shed",
 )
 
+# what an instrumented `bench_chaos --check` run must additionally emit:
+# the resilience layer's failure-domain, retry/degrade, quarantine, and
+# eager-purge counters plus the circuit-breaker state gauge.  The chaos
+# smoke fails CI when any of these families goes missing — a silent
+# resilience regression would otherwise look like a perfectly healthy run.
+REQUIRED_RESILIENCE_FAMILIES = (
+    "serve.chunk_failures",
+    "serve.retries",
+    "serve.breaker_state",
+    "serve.degraded_dispatches",
+    "serve.quarantined",
+    "serve.cycles_purged",
+)
+
 _PRESETS = {
     "serve": REQUIRED_SERVE_FAMILIES,
     "async": REQUIRED_ASYNC_SERVE_FAMILIES,
+    "chaos": REQUIRED_SERVE_FAMILIES + REQUIRED_RESILIENCE_FAMILIES,
 }
 
 _QUANTILES = (0.5, 0.9, 0.99)

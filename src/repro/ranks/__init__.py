@@ -24,6 +24,7 @@ from .monitor import (
     CondState,
     ConditionMonitor,
     DowndateGuard,
+    batch_cond_estimate,
     cond_estimate,
 )
 from .pivoted import (
@@ -49,6 +50,7 @@ __all__ = [
     "PivotedLstsq",
     "PivotedQR",
     "SketchedLstsq",
+    "batch_cond_estimate",
     "cond_estimate",
     "countsketch",
     "estimate_rank",

@@ -34,7 +34,8 @@ import numpy as np
 from repro import obs
 from repro.solvers.lstsq import solve_triangular
 
-__all__ = ["CondState", "ConditionMonitor", "DowndateGuard", "cond_estimate"]
+__all__ = ["CondState", "ConditionMonitor", "DowndateGuard",
+           "batch_cond_estimate", "cond_estimate"]
 
 
 class CondState(NamedTuple):
@@ -105,6 +106,20 @@ def cond_estimate(R: jax.Array, state: CondState | None = None,
     smin = jnp.minimum(smin, jnp.min(jnp.abs(jnp.diagonal(Ra))))
     cond = smax / jnp.maximum(smin, tiny)
     return CondState(cond=cond, smax=smax, smin=smin, vmax=vmax, vmin=vmin)
+
+
+def batch_cond_estimate(Rb: jax.Array, iters: int = 4) -> jax.Array:
+    """Per-lane ``cond_2`` estimates for a stacked batch of triangular
+    factors: ``(B, n, n) -> (B,)``.
+
+    The vmapped form of :func:`cond_estimate` (fresh seed vectors, no
+    carry) — the serving layer's post-dispatch quarantine signal: lanes of
+    a fused batch whose returned R factor crossed the configured condition
+    bound get quarantined alongside the non-finite ones
+    (``ResilientDispatcher(max_cond=...)``).
+    """
+    return jax.vmap(lambda R: cond_estimate(R, iters=iters).cond)(
+        jnp.asarray(Rb))
 
 
 class ConditionMonitor:

@@ -9,6 +9,8 @@ paper's RDP/PE co-design, applied at the host/device boundary):
     batcher.py    continuous batching: open batches close on max_batch /
                   deadline / flush; per-(group, cycle) results
     policy.py     admission control: per-kind latency tiers, reject/shed
+    resilience.py failure domains: classify/retry/degrade/quarantine,
+                  circuit breakers, streaming-state snapshot vault
 
 ``repro.launch.serve_qr.QRServer`` remains the backwards-compatible
 closed-loop facade over these layers; new deployments compose them
@@ -29,23 +31,48 @@ directly::
 Guide with the layer diagram and knob catalog: ``docs/serving.md``.
 """
 from .batcher import ContinuousBatcher, OpenBatch
-from .dispatch import Dispatcher, ExecutableCache, InFlight
+from .dispatch import Dispatcher, DrainError, ExecutableCache, InFlight
 from .policy import AdmissionPolicy, LatencyTier, Rejected, ShedError
 from .requests import KINDS, Request, Ticket, group_signature, make_request
+from .resilience import (
+    DEFAULT_LADDER,
+    CircuitBreaker,
+    IntegrityError,
+    PoisonedError,
+    Provenance,
+    ResilientDispatcher,
+    RetryPolicy,
+    Rung,
+    ServeError,
+    StateVault,
+    classify_failure,
+)
 
 __all__ = [
     "AdmissionPolicy",
+    "CircuitBreaker",
     "ContinuousBatcher",
+    "DEFAULT_LADDER",
     "Dispatcher",
+    "DrainError",
     "ExecutableCache",
     "InFlight",
+    "IntegrityError",
     "KINDS",
     "LatencyTier",
     "OpenBatch",
+    "PoisonedError",
+    "Provenance",
     "Rejected",
     "Request",
+    "ResilientDispatcher",
+    "RetryPolicy",
+    "Rung",
+    "ServeError",
     "ShedError",
+    "StateVault",
     "Ticket",
+    "classify_failure",
     "group_signature",
     "make_request",
 ]

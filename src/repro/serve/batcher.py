@@ -40,10 +40,26 @@ from repro import obs
 from .dispatch import Dispatcher
 from .policy import AdmissionPolicy, Rejected, ShedError
 from .requests import KINDS, Request, Ticket, make_request
+from .resilience import ServeError
 
 __all__ = ["ContinuousBatcher", "OpenBatch"]
 
 _SHED = object()  # result-store sentinel for shed cycles
+
+
+@dataclass(frozen=True)
+class _PurgedCycle:
+    """Result-store marker for an eagerly purged fully-errored cycle.
+
+    When every ticket of a cycle resolved to a ``ServeError`` there is
+    nothing worth retaining until ``retain_cycles`` rotation — the per-slot
+    list (and its error tracebacks) is dropped immediately and this
+    fixed-size marker answers the cycle's tickets with one representative
+    error instead.
+    """
+
+    error: ServeError
+    count: int
 
 
 @dataclass
@@ -207,7 +223,8 @@ class ContinuousBatcher:
             now = 0.0
             group_span = contextlib.nullcontext()
         with group_span:
-            outs, handles = self.dispatcher.dispatch(key, batch.requests)
+            outs, handles = self.dispatcher.dispatch(key, batch.requests,
+                                                     cycle=batch.cycle)
         if rec:
             # with double buffering off, per-chunk dispatches blocked above,
             # so this measures the whole cycle: stacking + dispatch + scatter;
@@ -223,6 +240,13 @@ class ContinuousBatcher:
         self._cycles[key] = batch.cycle + 1
 
     def _store(self, key: tuple, cycle: int, outs) -> None:
+        if (outs is not _SHED and outs
+                and all(isinstance(o, ServeError) for o in outs)):
+            # fully-errored cycle: purge eagerly instead of lingering until
+            # retain_cycles rotation — tickets still resolve (to the error)
+            outs = _PurgedCycle(error=outs[0], count=len(outs))
+            if obs.enabled():
+                obs.counter("serve.cycles_purged", kind=key[0]).inc()
         cycles = self._results.setdefault(key, {})
         cycles[cycle] = outs
         if self.retain_cycles is not None:
@@ -240,6 +264,8 @@ class ContinuousBatcher:
         *other* groups have happened meanwhile), if a later close of the
         same group already replaced the result (``retain_cycles``), or — as
         the ``ShedError`` subclass — if the batch was shed under overload.
+        Raises the stored ``ServeError`` (``PoisonedError`` for quarantined
+        requests) when resilient dispatch failed the request.
         """
         cycles = self._results.get(ticket.group, {})
         if ticket.cycle in cycles:
@@ -248,7 +274,12 @@ class ContinuousBatcher:
                 raise ShedError(
                     f"ticket {ticket.kind}#{ticket.index} (group cycle "
                     f"{ticket.cycle}): shed under overload before dispatch")
-            return entry[ticket.index]
+            if isinstance(entry, _PurgedCycle):
+                raise entry.error
+            out = entry[ticket.index]
+            if isinstance(out, ServeError):
+                raise out
+            return out
         if self._cycles.get(ticket.group, 0) <= ticket.cycle:
             queued = len(getattr(self._open.get(ticket.group), "requests", ()))
             state = f"not yet flushed ({queued} request(s) queued in its group)"
@@ -274,7 +305,8 @@ class ContinuousBatcher:
         """
         self.dispatcher.drain()
         outs = [o for cycles in self._results.values()
-                for entry in cycles.values() if entry is not _SHED
-                for o in entry]
+                for entry in cycles.values()
+                if entry is not _SHED and not isinstance(entry, _PurgedCycle)
+                for o in entry if not isinstance(o, ServeError)]
         jax.block_until_ready(outs)
         return len(outs)

@@ -45,7 +45,26 @@ import jax.numpy as jnp
 
 from repro import obs
 
-__all__ = ["Dispatcher", "ExecutableCache", "InFlight"]
+__all__ = ["Dispatcher", "DrainError", "ExecutableCache", "InFlight"]
+
+
+class DrainError(RuntimeError):
+    """Aggregate of per-chunk finalization failures from ``pump``/``drain``.
+
+    ``failures`` is ``[(InFlight, exception), ...]`` — every failed chunk,
+    not just the first: a raise from one in-flight chunk must never orphan
+    the other double-buffered chunks' tickets, so pump/drain finalize every
+    chunk they can and report the casualties together afterwards.
+    """
+
+    def __init__(self, failures: list):
+        self.failures = list(failures)
+        detail = "; ".join(
+            f"{infl.key[0]}[{infl.nb}]: {type(e).__name__}: {e}"
+            for infl, e in self.failures)
+        super().__init__(
+            f"{len(self.failures)} in-flight chunk(s) failed to finalize: "
+            f"{detail}")
 
 
 class ExecutableCache:
@@ -88,6 +107,12 @@ class ExecutableCache:
 
     def keys(self):
         return list(self._entries)
+
+    def clear(self) -> None:
+        """Drop every cached executable (rebuilt on next use).  The chaos
+        harness's eviction-storm injector calls this; hit/miss counters are
+        deliberately kept — a storm shows up as a miss spike, not a reset."""
+        self._entries.clear()
 
 
 @jax.jit
@@ -179,7 +204,10 @@ class InFlight:
                    for x in self._leaves())
 
     def block(self) -> None:
-        jax.block_until_ready(list(self._leaves()))
+        # resilient dispatch stores typed ServeError objects in failed
+        # result slots; only array leaves can (and need to) be blocked on
+        jax.block_until_ready(
+            [x for x in self._leaves() if not isinstance(x, Exception)])
 
 
 @dataclass
@@ -415,7 +443,8 @@ class Dispatcher:
                   "lstsq_pivoted": _exec_lstsq_pivoted}
 
     # ------------------------------------------------------------ dispatch
-    def dispatch(self, key: tuple, reqs: list) -> tuple[list, list[InFlight]]:
+    def dispatch(self, key: tuple, reqs: list,
+                 cycle: int = 0) -> tuple[list, list[InFlight]]:
         """Dispatch one closed batch in ``max_batch`` chunks.
 
         Returns ``(outs, handles)``: per-request results in submission
@@ -423,6 +452,10 @@ class Dispatcher:
         mode the handles are un-finalized (the caller pumps/drains them);
         otherwise they are finalized here, chunk by chunk, before the next
         chunk is stacked — the legacy closed-loop behavior.
+
+        ``cycle`` is the batch cycle being dispatched — unused here, but
+        part of the signature so ``ResilientDispatcher`` can key its
+        per-(group, cycle) provenance records.
         """
         kind = key[0]
         exec_one = self._EXECUTORS[kind]
@@ -481,22 +514,49 @@ class Dispatcher:
 
     def pump(self) -> int:
         """Finalize every in-flight chunk whose buffers are ready
-        (non-blocking).  Returns the number finalized."""
+        (non-blocking).  Returns the number finalized cleanly; chunk
+        finalization failures are aggregated into one ``DrainError`` after
+        every ready chunk has been attempted (a bad chunk never blocks its
+        neighbors' finalization)."""
         done = [i for i in self._inflight if i.ready()]
+        failures = []
+        ok = 0
         for infl in done:
             if infl.done_at is None:
                 infl.done_at = time.perf_counter()
-            self.finalize(infl)
+            try:
+                self.finalize(infl)
+                ok += 1
+            except Exception as e:  # noqa: BLE001 — aggregated below
+                infl.finalized = True  # terminal: don't re-finalize later
+                failures.append((infl, e))
         self._inflight = [i for i in self._inflight if not i.finalized]
-        return len(done)
+        if failures:
+            raise DrainError(failures)
+        return ok
 
     def drain(self) -> int:
-        """Block on and finalize ALL in-flight chunks.  Returns the count."""
+        """Block on and finalize ALL in-flight chunks.
+
+        Returns the count finalized cleanly.  Every chunk is attempted even
+        when an earlier one raises (a deferred device error in one
+        double-buffered chunk must not orphan the other chunk's tickets);
+        failures are re-raised together as one ``DrainError`` at the end.
+        """
         pending = self._inflight
         self._inflight = []
+        failures = []
+        ok = 0
         for infl in pending:
-            infl.block()
-            if infl.done_at is None:
-                infl.done_at = time.perf_counter()
-            self.finalize(infl)
-        return len(pending)
+            try:
+                infl.block()
+                if infl.done_at is None:
+                    infl.done_at = time.perf_counter()
+                self.finalize(infl)
+                ok += 1
+            except Exception as e:  # noqa: BLE001 — aggregated below
+                infl.finalized = True
+                failures.append((infl, e))
+        if failures:
+            raise DrainError(failures)
+        return ok

@@ -22,7 +22,35 @@ from repro.core.ggr import ggr_triangularize
 
 from .qr_update import _tri_solve_lower, qr_append_rows, qr_downdate_row
 
-__all__ = ["LstsqResult", "RLSState", "RecursiveLS", "ggr_lstsq", "solve_triangular"]
+__all__ = ["LstsqResult", "RLSState", "RecursiveLS", "ggr_lstsq",
+           "solve_triangular", "state_integrity"]
+
+
+def state_integrity(state, max_cond: float | None = None) -> tuple[bool, str]:
+    """Integrity gate for a streaming factor state (``RLSState``,
+    ``KalmanState``, or any ``(R, d)``-carrying pytree).
+
+    Returns ``(ok, reason)``: every inexact leaf must be finite, and — when
+    ``max_cond`` is given and the state exposes an ``R`` attribute — the
+    triangular factor's ``cond_estimate`` must not exceed it.  This is what
+    ``repro.serve.StateVault`` runs at restore time so a corrupted snapshot
+    is rejected instead of resurrected; it is eager/host-side by design
+    (never call it under jit).
+    """
+    for leaf in jax.tree_util.tree_leaves(state):
+        a = jnp.asarray(leaf)
+        if (jnp.issubdtype(a.dtype, jnp.inexact)
+                and not bool(jnp.isfinite(a).all())):
+            return False, "non-finite leaf"
+    R = getattr(state, "R", None)
+    if max_cond is not None and R is not None:
+        from repro.ranks.monitor import cond_estimate  # lazy: ranks -> solvers
+
+        cond = float(cond_estimate(jnp.asarray(R)).cond)
+        if not cond <= max_cond:
+            return False, (f"cond estimate {cond:.3e} exceeds "
+                           f"bound {max_cond:.3e}")
+    return True, "ok"
 
 # Above this problem size the one-shot solvers dispatch their augmented sweep
 # to the blocked panel driver (``core.blocked.ggr_triangularize_blocked``):

@@ -4,6 +4,16 @@ Not imported by any production path — tests and benchmarks pull from here
 so their matrix suites, error metrics, and tolerance budgets stay in one
 place instead of drifting apart file by file.
 """
+from .faults import (
+    FaultInjector,
+    FaultPlan,
+    InjectedFatal,
+    InjectedPoison,
+    InjectedTransient,
+    ScriptedInjector,
+    inject,
+    poison_workload,
+)
 from .error_harness import (
     DEFAULT_CONDS,
     DEFAULT_RANK_CONDS,
@@ -31,7 +41,13 @@ __all__ = [
     "DEFAULT_CONDS",
     "DEFAULT_RANK_CONDS",
     "DEFAULT_SHAPES",
+    "FaultInjector",
+    "FaultPlan",
+    "InjectedFatal",
+    "InjectedPoison",
+    "InjectedTransient",
     "RankCase",
+    "ScriptedInjector",
     "backward_error",
     "budget_is_meaningful",
     "dtype_eps",
@@ -41,8 +57,10 @@ __all__ = [
     "forward_error",
     "graded_matrix",
     "gram_residual",
+    "inject",
     "matrix_suite",
     "orthogonality_loss",
+    "poison_workload",
     "rank_deficient_matrix",
     "rank_deficient_suite",
     "sign_align",

@@ -1,0 +1,233 @@
+"""Lifecycle invariant: every admitted ticket terminates exactly once.
+
+Random interleavings of submit / poisoned-submit / injected-fault /
+flush / pump / drain over the resilient serving stack must leave every
+ticket in EXACTLY ONE terminal state:
+
+* a result (finite arrays),
+* a typed ``ServeError`` (retry + ladder exhausted),
+* a ``PoisonedError`` (quarantined),
+* a ``ShedError`` (batch dropped under overload), or
+* ``Rejected`` at admission (no ticket was ever issued).
+
+No ticket may be silently lost (``KeyError`` after a final flush+drain)
+and no terminal state may change on a second read — the contract that
+lets a serving frontend retry/report per request without auditing the
+engine's internals.
+
+The interleavings come from two generators: a hypothesis
+``RuleBasedStateMachine`` (skipped when hypothesis isn't installed, same
+as ``test_property.py``) and a seeded random walk that keeps the
+invariant exercised in environments without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (
+    AdmissionPolicy,
+    ContinuousBatcher,
+    LatencyTier,
+    PoisonedError,
+    Rejected,
+    ResilientDispatcher,
+    RetryPolicy,
+    ServeError,
+    ShedError,
+)
+from repro.serve import resilience as _resilience
+from repro.testing.faults import InjectedTransient
+
+_NO_SLEEP = lambda s: None  # noqa: E731
+
+_TERMINAL = ("result", "serve_error", "poisoned", "shed")
+
+
+class FlakyInjector:
+    """Fails the next N executor attempts when armed (any kind, any rung)."""
+
+    def __init__(self):
+        self.remaining = 0
+
+    def arm(self, n: int) -> None:
+        self.remaining = n
+
+    def on_dispatch(self, kind, rung, dispatcher, chunk=None):
+        if self.remaining > 0:
+            self.remaining -= 1
+            raise InjectedTransient("lifecycle fault")
+
+
+class Harness:
+    """The engine under test plus the per-ticket expected/observed ledger."""
+
+    def __init__(self):
+        self.injector = FlakyInjector()
+        self._prev = _resilience.set_injector(self.injector)
+        dispatcher = ResilientDispatcher(
+            backend="reference", max_batch=4,
+            retry=RetryPolicy(max_attempts=2, backoff=0.0),
+            sleep=_NO_SLEEP)
+        policy = AdmissionPolicy(tiers={
+            "lstsq": LatencyTier(max_queue=6, on_full="reject"),
+            "append": LatencyTier(max_queue=6, on_full="shed_oldest"),
+        })
+        self.engine = ContinuousBatcher(dispatcher, policy=policy,
+                                        admit_max=4, retain_cycles=None)
+        self.rng = np.random.default_rng(0)
+        self.tickets = []   # (ticket, poisoned: bool)
+        self.rejected = 0
+
+    def close(self):
+        _resilience.set_injector(self._prev)
+
+    # ------------------------------------------------------------- actions
+    def submit(self, kind: str, poisoned: bool) -> None:
+        if kind == "append":
+            R = np.triu(self.rng.standard_normal((4, 4))).astype(np.float32)
+            np.fill_diagonal(R, np.abs(np.diag(R)) + 1.0)
+            U = self.rng.standard_normal((2, 4)).astype(np.float32)
+            if poisoned:
+                U[0, 0] = np.nan
+            args = (R, U)
+        else:
+            A = self.rng.standard_normal((8, 3)).astype(np.float32)
+            b = self.rng.standard_normal((8, 1)).astype(np.float32)
+            if poisoned:
+                A[0, 0] = np.nan
+            args = (A, b)
+        try:
+            ticket = self.engine.submit(kind, *args)
+        except Rejected:
+            self.rejected += 1
+            return
+        self.tickets.append((ticket, poisoned))
+
+    def arm_faults(self, n: int) -> None:
+        self.injector.arm(n)
+
+    def flush(self) -> None:
+        self.engine.flush()
+
+    def drain(self) -> None:
+        self.engine.drain()
+
+    # ----------------------------------------------------------- invariant
+    def _outcome(self, ticket) -> str:
+        try:
+            out = self.engine.result(ticket)
+        except PoisonedError:
+            return "poisoned"
+        except ShedError:
+            return "shed"
+        except ServeError:
+            return "serve_error"
+        leaves = out if isinstance(out, tuple) else (out,)
+        for leaf in leaves:
+            a = np.asarray(leaf)
+            if np.issubdtype(a.dtype, np.floating):
+                assert np.isfinite(a).all(), "non-finite result leaked"
+        return "result"
+
+    def check_terminal(self) -> None:
+        """After a final flush+drain every ticket has exactly one stable
+        terminal state, and poisoned submissions never produce a result."""
+        self.injector.arm(0)
+        self.engine.flush()
+        self.engine.drain()
+        for ticket, poisoned in self.tickets:
+            first = self._outcome(ticket)
+            assert first in _TERMINAL
+            assert self._outcome(ticket) == first, \
+                "terminal state changed between reads"
+            if poisoned and first not in ("shed",):
+                assert first == "poisoned", \
+                    f"poisoned request terminated as {first!r}"
+
+
+# ------------------------------------------------------- seeded random walk
+@pytest.mark.parametrize("seed", range(6))
+def test_random_walk_lifecycle(seed):
+    rng = np.random.default_rng(seed)
+    h = Harness()
+    try:
+        for _ in range(40):
+            step = rng.integers(0, 10)
+            if step < 5:
+                h.submit(("append", "lstsq")[int(rng.integers(0, 2))],
+                         poisoned=bool(rng.random() < 0.15))
+            elif step < 7:
+                h.arm_faults(int(rng.integers(1, 6)))
+            elif step < 9:
+                h.flush()
+            else:
+                h.drain()
+        h.check_terminal()
+        assert h.tickets, "walk admitted no work"
+    finally:
+        h.close()
+
+
+def test_set_injector_roundtrip():
+    sentinel = FlakyInjector()
+    prev = _resilience.set_injector(sentinel)
+    try:
+        assert _resilience.get_injector() is sentinel
+    finally:
+        _resilience.set_injector(prev)
+    assert _resilience.get_injector() is not sentinel
+
+
+# --------------------------------------------------- hypothesis state machine
+# guarded import (not importorskip: the random-walk tests above must still
+# run in environments without hypothesis, mirroring test_property.py's tier)
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        initialize,
+        invariant,
+        rule,
+    )
+except ImportError:
+    RuleBasedStateMachine = None
+
+if RuleBasedStateMachine is not None:
+    class ServeLifecycle(RuleBasedStateMachine):
+        """Hypothesis drives the harness through arbitrary interleavings."""
+
+        @initialize()
+        def setup(self):
+            self.h = Harness()
+
+        @rule(kind=st.sampled_from(["append", "lstsq"]),
+              poisoned=st.booleans())
+        def submit(self, kind, poisoned):
+            self.h.submit(kind, poisoned)
+
+        @rule(n=st.integers(min_value=1, max_value=8))
+        def arm_faults(self, n):
+            self.h.arm_faults(n)
+
+        @rule()
+        def flush(self):
+            self.h.flush()
+
+        @rule()
+        def drain(self):
+            self.h.drain()
+
+        @invariant()
+        def no_pending_explosion(self):
+            # admission bounds cap the undispatched backlog at all times
+            assert self.h.engine.pending() <= 2 * 6
+
+        def teardown(self):
+            try:
+                self.h.check_terminal()
+            finally:
+                self.h.close()
+
+    ServeLifecycle.TestCase.settings = settings(
+        max_examples=20, stateful_step_count=30, deadline=None)
+    TestServeLifecycle = ServeLifecycle.TestCase
